@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timed(name: str, fn: Callable, *, repeats: int = 3):
+    """Run fn, record (name, us_per_call, derived-summary-string)."""
+    fn()  # warmup / build caches
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def run_and_emit(name: str, fn: Callable, derive: Callable[[object], str],
+                 repeats: int = 1):
+    out, us = timed(name, fn, repeats=repeats)
+    emit(name, us, derive(out))
+    return out

@@ -1,0 +1,38 @@
+"""Beyond-paper: cross-layer NVM verdicts for the assigned LM architectures,
+fed by the compiled multi-pod dry-run records (TPU mode)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import run_and_emit
+from repro.core.crosslayer import analyze_dryrun_dir
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    tag = next((t for t in ("final", "baseline")
+                if RESULTS.exists() and list(RESULTS.glob(f"*__{t}.json"))),
+               None)
+    if tag is None:
+        print("crosslayer_tpu,0.0,SKIPPED (run launch/dryrun first)")
+        return
+
+    def work():
+        return analyze_dryrun_dir(str(RESULTS), tag=tag)
+
+    def derive(cells):
+        if not cells:
+            return "no cells"
+        best = min(cells, key=lambda c: c.edp_ratio["SOT"])
+        worst = max(cells, key=lambda c: c.edp_ratio["SOT"])
+        import statistics
+        mean_sot = statistics.mean(c.edp_ratio["SOT"] for c in cells)
+        mean_stt = statistics.mean(c.edp_ratio["STT"] for c in cells)
+        return (f"{len(cells)} cells | mean EDP ratio STT={mean_stt:.2f} "
+                f"SOT={mean_sot:.2f} | best SOT cell "
+                f"{best.arch}x{best.shape} ({best.edp_ratio['SOT']:.2f}) | "
+                f"worst {worst.arch}x{worst.shape} "
+                f"({worst.edp_ratio['SOT']:.2f})")
+
+    run_and_emit("crosslayer_tpu", work, derive)

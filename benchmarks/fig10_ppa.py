@@ -1,0 +1,31 @@
+"""Fig 10: cache PPA scaling 1-32MB, incl. the published crossovers."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.scaling import ppa_scaling
+
+
+def run():
+    def work():
+        return ppa_scaling()
+
+    def derive(cfgs):
+        # crossovers the paper calls out:
+        #  * MRAM read latency beats SRAM beyond ~4MB
+        #  * SOT read energy beats SRAM at ~7-8MB
+        #  * SRAM write latency approaches STT's at 32MB
+        sram, stt, sot = cfgs["SRAM"], cfgs["STT"], cfgs["SOT"]
+        rl_cross = next((c for c in sorted(sram) if
+                         stt[c].read_latency_ns < sram[c].read_latency_ns),
+                        None)
+        re_cross = next((c for c in sorted(sram) if
+                         sot[c].read_energy_nj < sram[c].read_energy_nj),
+                        None)
+        wl32 = sram[32].write_latency_ns / stt[32].write_latency_ns
+        area32 = sram[32].area_mm2 / sot[32].area_mm2
+        return (f"STT read-lat crossover @ {rl_cross}MB (paper ~4-8MB) | "
+                f"SOT read-energy crossover @ {re_cross}MB (paper ~7MB) | "
+                f"SRAM/STT write-lat @32MB = {wl32:.2f} (paper ->~1) | "
+                f"SRAM/SOT area @32MB = {area32:.1f}x")
+
+    run_and_emit("fig10_ppa_scaling", work, derive)

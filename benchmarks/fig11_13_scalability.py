@@ -1,0 +1,30 @@
+"""Figs 11-13: normalized energy / latency / EDP vs capacity (scalability)."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.scaling import workload_scaling
+
+
+def run():
+    def work():
+        return workload_scaling()
+
+    def derive(res):
+        caps = sorted(res)
+        big = caps[-1]
+        e = {m: 1 / res[big][m]["total"]["mean"] for m in ("STT", "SOT")}
+        d = {m: 1 / res[big][m]["delay"]["mean"] for m in ("STT", "SOT")}
+        edp_best = {m: 1 / min(res[c][m]["edp"]["min"] for c in caps)
+                    for m in ("STT", "SOT")}
+        lat_small = {m: res[caps[0]][m]["delay"]["mean"]
+                     for m in ("STT", "SOT")}
+        return (
+            f"@{big}MB energy {e['STT']:.0f}x/{e['SOT']:.0f}x "
+            f"(paper up-to 31.2/36.4) | latency {d['STT']:.1f}x/"
+            f"{d['SOT']:.1f}x (paper up-to 2.1/2.6) | EDP best "
+            f"{edp_best['STT']:.0f}x/{edp_best['SOT']:.0f}x "
+            f"(paper up-to 65/95) | small-cap latency x"
+            f"{lat_small['STT']:.1f}/{lat_small['SOT']:.1f} "
+            f"(SRAM wins small, paper up-to 3.2/2)")
+
+    run_and_emit("fig11_13_scalability", work, derive)

@@ -1,0 +1,19 @@
+"""Fig 3: L2 read/write transaction ratios across the workload set."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.profiles import paper_profiles
+
+
+def run():
+    def work():
+        return paper_profiles()
+
+    def derive(profs):
+        ratios = {p.label: round(p.rw_ratio, 1) for p in profs}
+        lo, hi = min(ratios.values()), max(ratios.values())
+        in_range = 1.5 <= lo and hi <= 26.5
+        return (f"range [{lo},{hi}] (paper: 2..26; in-range={in_range}) | "
+                + " ".join(f"{k}={v}" for k, v in ratios.items()))
+
+    run_and_emit("fig3_rw_ratios", work, derive)

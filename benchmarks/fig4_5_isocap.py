@@ -1,0 +1,32 @@
+"""Figs 4-5: iso-capacity dynamic/leakage/total energy + EDP vs SRAM."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.iso import iso_capacity, summarize
+from repro.core.profiles import paper_profiles
+
+
+def run():
+    def work():
+        profs = paper_profiles()
+        res = iso_capacity(profs)
+        dl = [r for r in res if not r.workload.startswith("HPCG")]
+        return res, dl
+
+    def derive(out):
+        res, dl = out
+        d = summarize(dl, "dynamic")
+        l = summarize(dl, "leakage")
+        t = summarize(dl, "total")
+        e = summarize(res, "edp_with_dram")
+        return (
+            f"dyn x{d['STT']['mean']:.1f}/{d['SOT']['mean']:.1f} "
+            f"(paper 2.2/1.3) | "
+            f"leak 1/{1/l['STT']['mean']:.1f}x,1/{1/l['SOT']['mean']:.1f}x "
+            f"(paper 6.3/10) | "
+            f"total {1/t['STT']['mean']:.1f}x/{1/t['SOT']['mean']:.1f}x "
+            f"(paper 5.3/8.6) | "
+            f"EDP up to {e['STT']['best_reduction_x']:.1f}x/"
+            f"{e['SOT']['best_reduction_x']:.1f}x (paper 3.8/4.7)")
+
+    run_and_emit("fig4_5_isocapacity", work, derive)

@@ -1,0 +1,28 @@
+"""Fig 6: batch-size impact on AlexNet EDP (iso-capacity)."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.iso import batch_sweep
+
+
+def run():
+    def work():
+        return (batch_sweep("AlexNet", "training"),
+                batch_sweep("AlexNet", "inference"))
+
+    def derive(out):
+        tr, inf = out
+        def red(sw, m):
+            return [round(1 / sw[b].metrics[m]["edp_with_dram"], 2)
+                    for b in sorted(sw)]
+        t_stt, i_stt = red(tr, "STT"), red(inf, "STT")
+        t_sot, i_sot = red(tr, "SOT"), red(inf, "SOT")
+        mono_t = all(a <= b + 1e-9 for a, b in zip(t_stt, t_stt[1:]))
+        mono_i = all(a >= b - 1e-9 for a, b in zip(i_stt, i_stt[1:]))
+        return (f"train STT {t_stt[0]}->{t_stt[-1]}x (paper 2.3->4.6, "
+                f"increasing={mono_t}) | inf STT {i_stt[0]}->{i_stt[-1]}x "
+                f"(paper 5.4->4.1, decreasing={mono_i}) | "
+                f"train SOT {t_sot[0]}->{t_sot[-1]}x (paper 7.2->7.6) | "
+                f"inf SOT {i_sot[0]}->{i_sot[-1]}x (paper 7.1->7.3)")
+
+    run_and_emit("fig6_batch_size", work, derive)

@@ -1,0 +1,23 @@
+"""Fig 7: DRAM access reduction vs L2 capacity (miss model + simulator)."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.cachesim import dram_reduction_curve
+from repro.core.dram import dram_reduction_pct
+
+
+def run():
+    def work():
+        analytic = {c: dram_reduction_pct(c) for c in (3, 6, 7, 10, 12, 24)}
+        simulated = dram_reduction_curve((3, 6, 12, 24), trace_len=40_000,
+                                         use_kernel=False)
+        return analytic, simulated
+
+    def derive(out):
+        analytic, sim = out
+        return (f"analytic 7MB={analytic[7]:.1f}% (paper 14.6) "
+                f"10MB={analytic[10]:.1f}% (paper 19.8) "
+                f"24MB={analytic[24]:.1f}% | simulator "
+                + " ".join(f"{c}MB={v:.1f}%" for c, v in sim.items()))
+
+    run_and_emit("fig7_dram_reduction", work, derive)

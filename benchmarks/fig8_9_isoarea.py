@@ -1,0 +1,32 @@
+"""Figs 8-9: iso-area energy + EDP (with/without DRAM) vs SRAM."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.iso import iso_area, iso_area_capacities, summarize
+from repro.core.profiles import paper_profiles
+
+
+def run():
+    def work():
+        profs = paper_profiles()
+        return iso_area(profs), iso_area_capacities()
+
+    def derive(out):
+        res, caps = out
+        dl = [r for r in res if not r.workload.startswith("HPCG")]
+        d = summarize(dl, "dynamic")
+        l = summarize(dl, "leakage")
+        e0 = summarize(res, "edp")
+        e1 = summarize(res, "edp_with_dram")
+        return (
+            f"caps STT={caps['STT']:.1f}MB SOT={caps['SOT']:.1f}MB "
+            f"(paper 7/10) | dyn x{d['STT']['mean']:.1f}/"
+            f"{d['SOT']['mean']:.1f} (paper 2.5/1.5) | "
+            f"leak 1/{1/l['STT']['mean']:.1f},1/{1/l['SOT']['mean']:.1f} "
+            f"(paper 2.2/2.3) | EDP(noDRAM) "
+            f"{e0['STT']['mean_reduction_x']:.1f}x/"
+            f"{e0['SOT']['mean_reduction_x']:.1f}x (paper ~1.2) | "
+            f"EDP(+DRAM) {e1['STT']['mean_reduction_x']:.1f}x/"
+            f"{e1['SOT']['mean_reduction_x']:.1f}x (paper 2/2.3)")
+
+    run_and_emit("fig8_9_isoarea", work, derive)

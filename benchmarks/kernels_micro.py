@@ -1,0 +1,61 @@
+"""Microbenchmarks: Pallas kernels (interpret mode) vs jnp oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import run_and_emit
+from repro.kernels import ops, ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    def flash():
+        q = jax.random.normal(ks[1], (1, 4, 256, 64))
+        k = jax.random.normal(ks[2], (1, 2, 256, 64))
+        v = jax.random.normal(ks[3], (1, 2, 256, 64))
+        o = ops.flash_attention(q, k, v, bq=128, bk=128)
+        r = ref.flash_attention_ref(q, k, v)
+        return float(jnp.max(jnp.abs(o - r)))
+
+    run_and_emit("kernel_flash_attention", flash,
+                 lambda d: f"max|err| vs oracle = {d:.2e}")
+
+    def ssd():
+        x = jax.random.normal(ks[1], (1, 4, 256, 32))
+        dt = jax.nn.softplus(jax.random.normal(ks[2], (1, 4, 256)))
+        A = -jnp.exp(jax.random.normal(ks[3], (4,))) * 0.3
+        dtA = dt * A[None, :, None]
+        Bm = jax.random.normal(ks[2], (1, 256, 16))
+        Cm = jax.random.normal(ks[3], (1, 256, 16))
+        y = ops.ssd_scan(x, dt, dtA, Bm, Cm, chunk=64)
+        r = ref.ssd_scan_ref(x, dt, dtA, Bm, Cm)
+        return float(jnp.max(jnp.abs(y - r)))
+
+    run_and_emit("kernel_ssd_scan", ssd,
+                 lambda d: f"max|err| vs oracle = {d:.2e}")
+
+    def rglru():
+        a = jax.nn.sigmoid(jax.random.normal(ks[1], (2, 512, 256)))
+        b = jax.random.normal(ks[2], (2, 512, 256)) * 0.1
+        y = ops.rglru_scan(a, b, block=128, width_tile=128)
+        r = ref.rglru_scan_ref(a, b)
+        return float(jnp.max(jnp.abs(y - r)))
+
+    run_and_emit("kernel_rglru_scan", rglru,
+                 lambda d: f"max|err| vs oracle = {d:.2e}")
+
+    def csim():
+        rng = np.random.RandomState(0)
+        sid = rng.randint(0, 128, 4000)
+        tg = rng.zipf(1.4, 4000) % 4000
+        h1, m1 = ops.cache_sim(jnp.asarray(sid), jnp.asarray(tg),
+                               num_sets=128, ways=8, sets_tile=32)
+        h2, m2 = ref.cache_sim_python(sid, tg, num_sets=128, ways=8)
+        return (int(h1), int(m1)) == (h2, m2)
+
+    run_and_emit("kernel_cache_sim", csim,
+                 lambda ok: f"kernel==python-LRU: {ok}")

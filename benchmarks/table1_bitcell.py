@@ -1,0 +1,29 @@
+"""Table 1: bitcell parameters — published values + parametric flow check."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.bitcell import (SOT, SOT_DEVICE, STT, STT_DEVICE, TABLE1,
+                                characterize, fin_sweep)
+
+
+def run():
+    def work():
+        stt = characterize(STT_DEVICE, write_fins=4, read_fins=4, sot=False,
+                           name="STT-4F")
+        sot = characterize(SOT_DEVICE, write_fins=3, read_fins=1, sot=True,
+                           name="SOT-3W1R")
+        sweep = fin_sweep(STT_DEVICE, sot=False) + fin_sweep(SOT_DEVICE,
+                                                             sot=True)
+        return stt, sot, sweep
+
+    def derive(out):
+        stt, sot, sweep = out
+        err_stt = abs(stt.write_latency_ps / STT.write_latency_ps - 1)
+        err_sot = abs(sot.write_latency_ps / SOT.write_latency_ps - 1)
+        return (f"STT wlat {stt.write_latency_ps:.0f}ps (pub "
+                f"{STT.write_latency_ps:.0f}; err {err_stt:.0%}) | "
+                f"SOT wlat {sot.write_latency_ps:.0f}ps (pub "
+                f"{SOT.write_latency_ps:.0f}; err {err_sot:.0%}) | "
+                f"fin sweep {len(sweep)} pts")
+
+    run_and_emit("table1_bitcell", work, derive)

@@ -1,0 +1,39 @@
+"""Table 2: EDAP-tuned cache PPA at iso-capacity / iso-area anchors."""
+from __future__ import annotations
+
+from benchmarks.common import run_and_emit
+from repro.core.tuner import iso_area_capacity, tune
+
+TARGETS = {
+    ("SRAM", 3): (2.91, 1.53, 0.35, 0.32, 6442, 5.53),
+    ("STT", 3): (2.98, 9.31, 0.81, 0.31, 748, 2.34),
+    ("STT", 7): (4.58, 10.06, 0.93, 0.43, 1706, 5.12),
+    ("SOT", 3): (3.71, 1.38, 0.49, 0.22, 527, 1.95),
+    ("SOT", 10): (6.69, 2.47, 0.51, 0.40, 1434, 5.64),
+}
+FIELDS = ("read_latency_ns", "write_latency_ns", "read_energy_nj",
+          "write_energy_nj", "leakage_mw", "area_mm2")
+
+
+def run():
+    def work():
+        rows = {}
+        for (mem, cap), tgt in TARGETS.items():
+            p = tune(mem, cap)
+            rows[(mem, cap)] = [getattr(p, f) for f in FIELDS]
+        sram_area = tune("SRAM", 3).area_mm2
+        iso = {m: iso_area_capacity(m, sram_area) for m in ("STT", "SOT")}
+        return rows, iso
+
+    def derive(out):
+        import math
+        rows, iso = out
+        errs = []
+        for key, tgt in TARGETS.items():
+            errs += [abs(math.log(p / t)) for p, t in zip(rows[key], tgt)]
+        mean_err = sum(errs) / len(errs)
+        return (f"mean|logerr|={mean_err:.3f} over {len(errs)} vals | "
+                f"iso-area caps STT={iso['STT'].capacity_mb:.1f}MB "
+                f"SOT={iso['SOT'].capacity_mb:.1f}MB (paper 7/10)")
+
+    run_and_emit("table2_cache_ppa", work, derive)

@@ -1,0 +1,43 @@
+"""Design-space exploration: sweep cache capacity x memory technology and
+print the full scalability picture (paper §4.3), plus the TPU cross-layer
+verdicts for any dry-run results present.
+
+    PYTHONPATH=src python examples/nvm_sweep.py
+"""
+from pathlib import Path
+
+from repro.core.scaling import ppa_scaling, workload_scaling
+
+print("=== PPA scaling (paper Fig 10) ===")
+cfgs = ppa_scaling()
+print(f"{'cap':>4} | " + " | ".join(f"{m:^22}" for m in cfgs))
+print(f"{'MB':>4} | " + " | ".join(f"{'rd-ns  wr-ns  mm2':^22}" for _ in cfgs))
+for c in sorted(next(iter(cfgs.values()))):
+    row = " | ".join(
+        f"{cfgs[m][c].read_latency_ns:6.2f} {cfgs[m][c].write_latency_ns:6.2f}"
+        f" {cfgs[m][c].area_mm2:7.2f}" for m in cfgs)
+    print(f"{c:4.0f} | {row}")
+
+print("\n=== workload-normalized EDP vs SRAM (paper Figs 11-13) ===")
+res = workload_scaling()
+print(f"{'cap':>4} | {'STT total':>10} {'STT edp':>9} | "
+      f"{'SOT total':>10} {'SOT edp':>9}")
+for c in sorted(res):
+    r = res[c]
+    print(f"{c:4.0f} | {r['STT']['total']['mean']:10.3f} "
+          f"{r['STT']['edp']['mean']:9.3f} | "
+          f"{r['SOT']['total']['mean']:10.3f} {r['SOT']['edp']['mean']:9.3f}")
+
+results = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+if results.exists() and list(results.glob("*.json")):
+    from repro.core.crosslayer import analyze_dryrun_dir
+    for tag in ("final", "baseline"):
+        cells = analyze_dryrun_dir(str(results), tag=tag)
+        if cells:
+            break
+    print(f"\n=== TPU cross-layer verdicts ({len(cells)} dry-run cells) ===")
+    for v in cells[:12]:
+        print(f"  {v.arch:24s} {v.shape:12s} {v.mesh:8s} "
+              f"EDP STT {v.edp_ratio['STT']:.2f}  SOT {v.edp_ratio['SOT']:.2f}")
+else:
+    print("\n(no dry-run results yet: run `python -m repro.launch.dryrun`)")

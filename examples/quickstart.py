@@ -1,0 +1,40 @@
+"""Quickstart: the DeepNVM++ pipeline end-to-end in ~40 lines.
+
+Characterize bitcells -> EDAP-tune caches -> profile a workload -> get the
+NVM-vs-SRAM verdict. Runs on CPU in seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import TABLE1, tune
+from repro.core.energy import evaluate, relative
+from repro.core.iso import iso_area_capacities
+from repro.core.profiles import profile
+
+print("=== 1. circuit-level bitcells (paper Table 1) ===")
+for name, cell in TABLE1.items():
+    print(f"  {name:5s} sense {cell.sense_latency_ps:5.0f}ps  "
+          f"write {cell.write_latency_ps:7.0f}ps  "
+          f"area {cell.area_rel_sram:.2f}x SRAM")
+
+print("\n=== 2. EDAP-optimal 3MB caches (paper Table 2 / Algorithm 1) ===")
+cfgs = {m: tune(m, 3) for m in TABLE1}
+for m, p in cfgs.items():
+    print(f"  {m:5s} read {p.read_latency_ns:4.2f}ns/{p.read_energy_nj:.2f}nJ"
+          f"  write {p.write_latency_ns:5.2f}ns/{p.write_energy_nj:.2f}nJ"
+          f"  leak {p.leakage_mw:5.0f}mW  area {p.area_mm2:.2f}mm^2"
+          f"  [banks={p.banks} rows={p.rows} {p.access_type}]")
+
+print("\n=== 3. workload memory behavior (paper §3.3, analytic nvprof) ===")
+p = profile("ResNet-18", "training", 64)
+print(f"  {p.label}: {p.l2_reads/1e6:.1f}M reads, {p.l2_writes/1e6:.1f}M "
+      f"writes (R/W = {p.rw_ratio:.1f}), {p.dram/1e3:.0f}K DRAM txns")
+
+print("\n=== 4. the verdict: NVM vs SRAM for this workload ===")
+base = evaluate(p, cfgs["SRAM"])
+for m in ("STT", "SOT"):
+    rel = relative(base, evaluate(p, cfgs[m]))
+    print(f"  {m}: {1/rel['total']:.1f}x less energy, "
+          f"{1/rel['edp_with_dram']:.1f}x lower EDP than SRAM")
+
+print("\n=== 5. iso-area: how much bigger can the NVM cache be? ===")
+print("  ", iso_area_capacities(), "(paper: STT 7MB, SOT 10MB)")

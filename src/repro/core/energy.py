@@ -1,0 +1,76 @@
+"""Transaction-level energy / delay / EDP model (paper §4 calculations).
+
+Per the paper: "we multiply the number of read and write transactions by
+the corresponding latency and energy values for those operations"; leakage
+energy integrates leakage power over the execution window; DRAM energy and
+latency are added where stated (Figs 5, 6, 9). All functions are JAX-
+vectorizable scalars (plain float math also works).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.cache_model import CachePPA
+from repro.core.constants import DRAM_ENERGY_NJ, DRAM_LATENCY_NS
+from repro.core.profiles import MemoryProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    """All paper §4 quantities for one (workload, cache) pair. Units:
+    energy nJ, delay ns."""
+    workload: str
+    mem: str
+    dynamic_nj: float
+    leakage_nj: float
+    dram_nj: float
+    delay_ns: float           # L2-only execution window
+    delay_dram_ns: float      # incl. DRAM transactions
+
+    @property
+    def total_nj(self) -> float:
+        return self.dynamic_nj + self.leakage_nj
+
+    @property
+    def total_with_dram_nj(self) -> float:
+        return self.dynamic_nj + self.leakage_nj + self.dram_nj
+
+    @property
+    def edp(self) -> float:   # no DRAM (Fig 9 top)
+        return self.total_nj * self.delay_ns
+
+    @property
+    def edp_with_dram(self) -> float:  # Figs 5/6/9 bottom
+        return self.total_with_dram_nj * self.delay_dram_ns
+
+
+def evaluate(p: MemoryProfile, ppa: CachePPA,
+             dram_transactions: Optional[float] = None) -> EnergyReport:
+    """Energy/delay of running profile ``p`` against cache ``ppa``."""
+    n_dram = p.dram if dram_transactions is None else dram_transactions
+    dyn = p.l2_reads * ppa.read_energy_nj + p.l2_writes * ppa.write_energy_nj
+    delay = (p.l2_reads * ppa.read_latency_ns
+             + p.l2_writes * ppa.write_latency_ns)
+    delay_dram = delay + n_dram * DRAM_LATENCY_NS
+    # mW * ns = pJ -> /1000 nJ; leakage integrates over the DRAM-inclusive
+    # execution window (the cache leaks while DRAM is serving misses too)
+    leak = ppa.leakage_mw * delay_dram * 1e-3
+    dram_e = n_dram * DRAM_ENERGY_NJ
+    return EnergyReport(
+        workload=p.label, mem=ppa.mem,
+        dynamic_nj=dyn, leakage_nj=leak, dram_nj=dram_e,
+        delay_ns=delay, delay_dram_ns=delay_dram,
+    )
+
+
+def relative(base: EnergyReport, other: EnergyReport) -> Dict[str, float]:
+    """Normalized-to-base metrics (paper plots are normalized to SRAM)."""
+    return {
+        "dynamic": other.dynamic_nj / base.dynamic_nj,
+        "leakage": other.leakage_nj / base.leakage_nj,
+        "total": other.total_nj / base.total_nj,
+        "delay": other.delay_ns / base.delay_ns,
+        "edp": other.edp / base.edp,
+        "edp_with_dram": other.edp_with_dram / base.edp_with_dram,
+    }

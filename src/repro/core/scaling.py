@@ -1,0 +1,58 @@
+"""Scalability analysis (paper §4.3, Figs 10-13).
+
+Each memory is EDAP-tuned independently at every capacity (1..32 MB), then
+evaluated on every workload; results are normalized to SRAM at the same
+capacity. DRAM terms are held at the 3MB-baseline counts (iso-capacity
+convention) so the curves isolate cache scalability.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import energy as en
+from repro.core.cache_model import CachePPA
+from repro.core.profiles import MemoryProfile, paper_profiles
+from repro.core.tuner import CAPACITIES_MB, MEMORIES, tune
+
+
+def ppa_scaling(capacities: Sequence[float] = CAPACITIES_MB
+                ) -> Dict[str, Dict[float, CachePPA]]:
+    """Fig 10: area / latency / energy vs capacity per memory."""
+    return {m: {c: tune(m, c) for c in capacities} for m in MEMORIES}
+
+
+def workload_scaling(profiles: Optional[List[MemoryProfile]] = None,
+                     capacities: Sequence[float] = CAPACITIES_MB,
+                     mode_filter: Optional[str] = None):
+    """Figs 11-13: normalized energy / latency / EDP vs capacity.
+
+    Returns {capacity: {mem: {metric: {mean, std}}}} across workloads.
+    """
+    import math
+
+    profiles = profiles or paper_profiles()
+    if mode_filter:
+        profiles = [p for p in profiles if p.mode == mode_filter]
+    cfgs = ppa_scaling(capacities)
+    out: Dict[float, Dict[str, Dict[str, Dict[str, float]]]] = {}
+    for c in capacities:
+        sram = cfgs["SRAM"][c]
+        per_mem: Dict[str, Dict[str, Dict[str, float]]] = {}
+        for m in ("STT", "SOT"):
+            ratios = {"total": [], "delay": [], "edp": []}
+            for p in profiles:
+                base = en.evaluate(p, sram)
+                rel = en.relative(base, en.evaluate(p, cfgs[m][c]))
+                ratios["total"].append(rel["total"])
+                ratios["delay"].append(rel["delay"])
+                ratios["edp"].append(rel["edp_with_dram"])
+            per_mem[m] = {
+                k: {
+                    "mean": sum(v) / len(v),
+                    "std": math.sqrt(sum((x - sum(v) / len(v)) ** 2
+                                         for x in v) / len(v)),
+                    "min": min(v),
+                } for k, v in ratios.items()
+            }
+        out[c] = per_mem
+    return out

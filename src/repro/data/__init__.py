@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Pipeline, batch_for_step
+
+__all__ = ["DataConfig", "Pipeline", "batch_for_step"]

@@ -1,0 +1,89 @@
+"""Deterministic synthetic LM data pipeline.
+
+Production posture: host-sharded (each process generates only its shard of
+the global batch), deterministic in (seed, step) so restarts resume exactly,
+with a background prefetch thread. Token streams are hash-generated (no
+dataset dependency) with a Zipf-ish marginal so losses behave like text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+
+def _batch_at(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Deterministic batch for (seed, step, host). Zipf-ish tokens."""
+    rng = np.random.Generator(np.random.Philox(
+        key=cfg.seed, counter=[step, cfg.host_id, 0, 0]))
+    u = rng.random((cfg.host_batch, cfg.seq_len + 1))
+    # inverse-CDF of a truncated zipf(1.1)
+    ranks = (u ** -2.2 - 1.0)
+    tokens = np.clip(ranks.astype(np.int64), 0, cfg.vocab_size - 1)
+    tokens = tokens.astype(np.int32)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+class Pipeline:
+    """Prefetching iterator with checkpointable position."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0,
+                 prefetch: int = 2):
+        self.cfg = cfg
+        self._step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = _batch_at(self.cfg, step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        step, batch = self._q.get()
+        self._step = step + 1
+        return batch
+
+    @property
+    def state(self) -> Dict[str, int]:
+        """Checkpointable position (next step to consume)."""
+        return {"step": self._step}
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2)
+
+
+def batch_for_step(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Random access (used by restarts and tests)."""
+    return _batch_at(cfg, step)

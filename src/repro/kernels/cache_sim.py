@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: trace-driven set-associative LRU cache simulator.
+
+This is the paper's GPGPU-Sim replacement hot loop (DESIGN.md §3): iso-area
+DRAM-access counts need cache-miss simulation at capacities that don't
+exist in hardware. The TPU-native decomposition: SETS are embarrassingly
+parallel (grid over set tiles, tag/LRU-age state lives in VMEM scratch);
+the TRACE is sequential (fori_loop). Each set tile scans the full trace
+and handles only accesses that map to one of its sets via masked
+vectorized updates — O(sets_tile x ways) vector work per access on the
+VPU, no serialized per-way branching.
+
+Inputs: set_ids (T,) int32, tags (T,) int32 (precomputed from line
+addresses). Output: per-set-tile [hits, misses] counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EMPTY = -1  # empty-way tag sentinel
+
+
+def _cachesim_kernel(setid_ref, tag_ref, out_ref, tags_scr, age_scr,
+                     cnt_scr, *, sets_tile: int, ways: int, trace_len: int):
+    s0 = pl.program_id(0) * sets_tile
+
+    tags_scr[...] = jnp.full(tags_scr.shape, EMPTY, tags_scr.dtype)
+    age_scr[...] = jnp.zeros_like(age_scr)
+    cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    set_ids = setid_ref[...]
+    tags_in = tag_ref[...]
+
+    def step(t, _):
+        sid = set_ids[t] - s0                       # local set row
+        tag = tags_in[t]
+        in_tile = (sid >= 0) & (sid < sets_tile)
+        row = jnp.where(in_tile, sid, 0)
+        row_mask = (jax.lax.broadcasted_iota(jnp.int32, (sets_tile, ways), 0)
+                    == row) & in_tile               # (sets, ways)
+        tags = tags_scr[...]
+        ages = age_scr[...]
+        hit_mask = row_mask & (tags == tag)
+        hit = jnp.any(hit_mask)
+        # LRU victim within the row: max age
+        row_ages = jnp.where(row_mask, ages, -1)
+        victim_flat = jnp.argmax(row_ages.reshape(-1))
+        victim_mask = (jax.lax.broadcasted_iota(
+            jnp.int32, (sets_tile * ways,), 0) == victim_flat
+        ).reshape(sets_tile, ways) & row_mask
+        write_mask = jnp.where(hit, hit_mask, victim_mask)
+        tags_scr[...] = jnp.where(write_mask, tag, tags)
+        # age: touched line -> 0; other lines in the row -> +1
+        age_scr[...] = jnp.where(write_mask, 0,
+                                 jnp.where(row_mask, ages + 1, ages))
+        cnt_scr[0] = cnt_scr[0] + jnp.where(in_tile & hit, 1, 0)
+        cnt_scr[1] = cnt_scr[1] + jnp.where(in_tile & ~hit, 1, 0)
+        return 0
+
+    jax.lax.fori_loop(0, trace_len, step, 0)
+    out_ref[0] = cnt_scr[...]
+
+
+def cache_sim(set_ids, tags, *, num_sets: int, ways: int,
+              sets_tile: int = 128, interpret: bool = False):
+    """Simulate an LRU set-associative cache over an access trace.
+
+    Returns (hits, misses) totals.
+    """
+    T = set_ids.shape[0]
+    assert num_sets % sets_tile == 0, (num_sets, sets_tile)
+    n_tiles = num_sets // sets_tile
+    kernel = functools.partial(_cachesim_kernel, sets_tile=sets_tile,
+                               ways=ways, trace_len=T)
+    counts = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((T,), lambda i: (0,)),
+            pl.BlockSpec((T,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, 2), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((sets_tile, ways), jnp.int32),
+            pltpu.VMEM((sets_tile, ways), jnp.int32),
+            pltpu.VMEM((2,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(set_ids.astype(jnp.int32), tags.astype(jnp.int32))
+    total = counts.sum(axis=0)
+    return total[0], total[1]

@@ -1,0 +1,103 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Grid (batch, q_head, q_block, kv_block); the kv_block dimension is the
+innermost "arbitrary" (sequential) axis, carrying the online-softmax state
+(m, l, acc) in VMEM scratch. GQA is handled in the k/v index_maps
+(q head h reads kv head h // group_size), so k/v are never materialized
+per-q-head. Causal + local-window masking and logit soft-capping are
+applied with global position iota.
+
+Layouts: q (B, H, Sq, hd); k/v (B, K, Skv, hd); out (B, H, Sq, hd).
+Block shapes are 128-aligned for the MXU (Bq x hd and Bk x hd tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  kv_blocks: int, bq: int, bk: int, causal: bool,
+                  window: int, logit_cap: float, scale: float):
+    j = pl.program_id(3)
+    i = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (Bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (Bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (Bq, Bk)
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(j == kv_blocks - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-37)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_cap: float = 0.0, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q (B,H,Sq,hd), k/v (B,K,Skv,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    _, K, Skv, _ = k.shape
+    G = H // K
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, kv_blocks=nk, bq=bq, bk=bk, causal=causal,
+        window=window, logit_cap=logit_cap, scale=hd ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),       # l (running sum)
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

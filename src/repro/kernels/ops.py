@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run with interpret=True, which executes the
+kernel body in Python for correctness validation; on TPU they compile to
+Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cache_sim as _cs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret(flag):
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_cap", "bq",
+                                   "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                    bq=128, bk=128, interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               logit_cap=logit_cap, bq=bq, bk=bk,
+                               interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, dtA, Bmat, Cmat, *, chunk=128, interpret=None):
+    return _ssd.ssd_scan(x, dt, dtA, Bmat, Cmat, chunk=chunk,
+                         interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("block", "width_tile", "interpret"))
+def rglru_scan(a, b, *, block=256, width_tile=512, interpret=None):
+    return _rg.rglru_scan_kernel(a, b, block=block, width_tile=width_tile,
+                                 interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("num_sets", "ways", "sets_tile",
+                                   "interpret"))
+def cache_sim(set_ids, tags, *, num_sets, ways, sets_tile=128,
+              interpret=None):
+    return _cs.cache_sim(set_ids, tags, num_sets=num_sets, ways=ways,
+                         sets_tile=sets_tile, interpret=_interpret(interpret))

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, logit_cap=0.0):
+    """q (B,H,Sq,hd); k/v (B,K,Skv,hd) -> (B,H,Sq,hd). O(S^2) reference."""
+    B, H, Sq, hd = q.shape
+    _, K, Skv, _ = k.shape
+    G = H // K
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * hd ** -0.5, kf)
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, dtA, Bmat, Cmat):
+    """Naive O(S^2) SSD. x (B,H,S,P); dt/dtA (B,H,S); B/C (B,S,N)."""
+    B, H, S, P = x.shape
+    cum = jnp.cumsum(dtA.astype(jnp.float32), axis=-1)        # (B,H,S)
+    li = cum[..., :, None] - cum[..., None, :]                 # (B,H,S,S)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    decay = jnp.where(tri[None, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bin,bjn->bij", Cmat.astype(jnp.float32),
+                    Bmat.astype(jnp.float32))                  # (B,S,S)
+    w = cb[:, None] * decay * dt.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhij,bhjp->bhip", w, x.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """Plain sequential recurrence h_t = a_t h_{t-1} + b_t. (B,S,R)."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+    B, S, R = a.shape
+    h0 = jnp.zeros((B, R), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a.transpose(1, 0, 2).astype(jnp.float32),
+                                    b.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2).astype(a.dtype)
+
+
+def cache_sim_ref(set_ids, tags, *, num_sets: int, ways: int):
+    """jnp scan-based LRU set-associative simulator (oracle)."""
+    import numpy as np
+
+    def step(state, inp):
+        tag_arr, age_arr, hits, misses = state
+        sid, tag = inp
+        row_tags = tag_arr[sid]                 # (ways,)
+        row_ages = age_arr[sid]
+        hit_way = jnp.where(row_tags == tag, jnp.arange(ways), ways).min()
+        hit = hit_way < ways
+        victim = jnp.argmax(row_ages)
+        way = jnp.where(hit, hit_way, victim)
+        tag_arr = tag_arr.at[sid, way].set(tag)
+        age_arr = age_arr.at[sid].add(1)
+        age_arr = age_arr.at[sid, way].set(0)
+        return (tag_arr, age_arr, hits + hit.astype(jnp.int32),
+                misses + (~hit).astype(jnp.int32)), None
+
+    tag0 = jnp.full((num_sets, ways), -1, jnp.int32)
+    age0 = jnp.zeros((num_sets, ways), jnp.int32)
+    (t, a, h, m), _ = jax.lax.scan(
+        step, (tag0, age0, jnp.int32(0), jnp.int32(0)),
+        (set_ids.astype(jnp.int32), tags.astype(jnp.int32)))
+    return h, m
+
+
+def cache_sim_python(set_ids, tags, *, num_sets: int, ways: int):
+    """Plain-python dict LRU (second, independent oracle for tests)."""
+    import collections
+    sets = [collections.OrderedDict() for _ in range(num_sets)]
+    hits = misses = 0
+    for sid, tag in zip(list(set_ids), list(tags)):
+        s = sets[int(sid)]
+        t = int(tag)
+        if t in s:
+            hits += 1
+            s.move_to_end(t)
+        else:
+            misses += 1
+            if len(s) >= ways:
+                s.popitem(last=False)
+            s[t] = True
+    return hits, misses

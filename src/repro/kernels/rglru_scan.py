@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence.
+
+Grid (batch, width_tile, time_block); time is sequential and carries the
+hidden state h (one f32 vector per width tile) in VMEM scratch. Within a
+block the recurrence h_t = a_t * h_{t-1} + b_t runs as a fori_loop over
+rows of the (Q, Rt) VMEM tiles — vector ops on the VPU, the layout
+RecurrentGemma uses on TPU.
+
+Layouts: a, b (B, S, R) with precomputed a_t = exp(log_a) and
+b_t = sqrt(1-a^2) * i_t * x_t; out (B, S, R).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, y_ref, h_scr, *, q_block: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)     # (Q, Rt)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(i, carry):
+        h, ys = carry
+        h = a[i] * h + b[i]
+        return h, ys.at[i].set(h)
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros_like(a)
+    h, ys = jax.lax.fori_loop(0, q_block, step, (h0, ys0))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def rglru_scan_kernel(a, b, *, block: int = 256, width_tile: int = 512,
+                      interpret: bool = False):
+    """a, b (B, S, R) -> h sequence (B, S, R)."""
+    B, S, R = a.shape
+    block = min(block, S)
+    width_tile = min(width_tile, R)
+    assert S % block == 0 and R % width_tile == 0, (S, block, R, width_tile)
+    grid = (B, R // width_tile, S // block)
+    kernel = functools.partial(_rglru_kernel, q_block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block, width_tile), lambda b_, r, t: (b_, t, r)),
+            pl.BlockSpec((1, block, width_tile), lambda b_, r, t: (b_, t, r)),
+        ],
+        out_specs=pl.BlockSpec((1, block, width_tile),
+                               lambda b_, r, t: (b_, t, r)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), a.dtype),
+        scratch_shapes=[pltpu.VMEM((width_tile,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid (batch, head, chunk); the chunk axis is sequential and carries the
+(P, N) SSM state in VMEM scratch. Each step computes the intra-chunk
+quadratic term (Q x Q decay matrix on the MXU), the inter-chunk
+contribution from the carried state, and the state update — the same math
+as repro.models.ssm.ssd_chunked (the jnp oracle lives in kernels/ref.py).
+
+Layouts: x (B, H, S, P); dt, dtA (B, H, S); Bmat/Cmat (B, S, N);
+out (B, H, S, P). S = nc * Q.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_scr, *,
+                q_chunk: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)          # (Q,)  = dt * A
+    Bm = b_ref[0].astype(jnp.float32)            # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (Q, N)
+
+    cum = jnp.cumsum(a)                           # (Q,)
+    li = cum[:, None] - cum[None, :]              # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 1)
+    ldecay = jnp.where(tri, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    w = cb * ldecay * dt[None, :]                 # weights over j
+    y_diag = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))  # (Q, P)
+
+    s = s_scr[...]                                # (P, N)
+    y_off = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, s, (((1,), (1,)), ((), ())))          # (Q, P)
+
+    dstate = jnp.exp(cum[-1] - cum) * dt          # (Q,)
+    s_inc = jax.lax.dot_general(x, Bm * dstate[:, None],
+                                (((0,), (0,)), ((), ())))   # (P, N)
+    s_scr[...] = s * jnp.exp(cum[-1]) + s_inc
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, dtA, Bmat, Cmat, *, chunk: int = 128,
+             interpret: bool = False):
+    """x (B,H,S,P); dt/dtA (B,H,S); Bmat/Cmat (B,S,N) -> y (B,H,S,P)."""
+    B, H, S, P = x.shape
+    N = Bmat.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    grid = (B, H, nc)
+    kernel = functools.partial(_ssd_kernel, q_chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, dtA, Bmat, Cmat)

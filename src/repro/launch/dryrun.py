@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, derive
+roofline terms, persist one JSON per cell under results/dryrun/.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 host placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_config, list_archs
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models.api import build_model, input_specs
+from repro.optim import AdamW, warmup_cosine
+from repro.sharding import activation_sharding, default_rules, tree_shardings
+from repro.train.trainer import abstract_state, make_train_step, state_axes
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+INPUT_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "frames": ("batch", "seq", "embed_act"),
+    "vision_embeds": ("batch", "seq", "embed_act"),
+    "enc_out": ("batch", "seq", "embed_act"),
+}
+
+
+def _input_shardings(specs, mesh, rules):
+    axes = {k: INPUT_AXES[k] for k in specs}
+    return tree_shardings(axes, specs, mesh, rules)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             remat: str = None, attn_impl: str = "chunked",
+             fsdp: bool = None, microbatches: int = 1,
+             tag: str = "baseline", save: bool = True,
+             verbose: bool = True, config_overrides: dict = None,
+             rules_kwargs: dict = None) -> dict:
+    """Lower + compile one cell; return the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    overrides = dict(config_overrides or {})
+    if remat is not None:
+        overrides["remat"] = remat
+    if fsdp is not None:
+        overrides["fsdp"] = fsdp
+    if shape.kind != "train":
+        overrides["fsdp"] = False  # serving: params sharded over model only
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    msizes = mesh_axis_sizes(mesh)
+    chips = int(jax.numpy.prod(jnp.asarray(list(msizes.values()))))
+    rules = default_rules(fsdp=cfg.fsdp, multi_pod=multi_pod,
+                          **(rules_kwargs or {}))
+    model = build_model(cfg, max_seq=shape.seq_len)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh), activation_sharding(mesh, rules):
+        if shape.kind == "train":
+            opt = AdamW(lr=warmup_cosine(3e-4, 100, 10000))
+            step_fn = make_train_step(model, opt, microbatches=microbatches,
+                                      attn_impl=attn_impl)
+            st = abstract_state(model, opt)
+            st_shardings = tree_shardings(state_axes(model, opt), st, mesh,
+                                          rules)
+            in_shardings = (st_shardings, _input_shardings(specs, mesh, rules))
+            lowered = jax.jit(step_fn, in_shardings=in_shardings,
+                              out_shardings=(st_shardings, None),
+                              donate_argnums=(0,)).lower(st, specs)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, attn_impl=attn_impl)
+            params = model.abstract_params()
+            p_shardings = tree_shardings(model.param_axes(), params, mesh,
+                                         rules)
+            in_shardings = (p_shardings, _input_shardings(specs, mesh, rules))
+            lowered = jax.jit(prefill_fn, in_shardings=in_shardings
+                              ).lower(params, specs)
+        else:  # decode
+            def decode_fn(params, cache, batch, pos):
+                return model.decode_step(params, cache, batch, pos,
+                                         attn_impl=attn_impl)
+            params = model.abstract_params()
+            B = shape.global_batch
+            cache = model.abstract_cache(B, shape.seq_len)
+            p_sh = tree_shardings(model.param_axes(), params, mesh, rules)
+            c_sh = tree_shardings(model.cache_axes(B, shape.seq_len), cache,
+                                  mesh, rules)
+            in_shardings = (p_sh, c_sh, _input_shardings(specs, mesh, rules),
+                            None)
+            lowered = jax.jit(decode_fn, in_shardings=in_shardings,
+                              out_shardings=(None, c_sh),
+                              donate_argnums=(1,)).lower(
+                params, cache, specs, jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    roof = rf.analyze(compiled)
+    mf = rf.model_flops(cfg, shape, chips)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        mem["peak_bytes_est"] = (mem["argument_bytes"] + mem["temp_bytes"]
+                                 + mem["output_bytes"] - mem["alias_bytes"])
+    except Exception:
+        pass
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(chips),
+        "tag": tag,
+        "kind": shape.kind,
+        "knobs": {"remat": cfg.remat, "attn_impl": attn_impl,
+                  "fsdp": cfg.fsdp, "microbatches": microbatches},
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "model_flops_per_device": mf,
+        "model_flops_ratio": (mf / roof.flops_per_device
+                              if roof.flops_per_device else None),
+        "roofline_fraction": roof.model_flops_util(mf),
+    }
+    if verbose:
+        print(f"[{tag}] {arch} x {shape_name} x {record['mesh']}: "
+              f"compile {t_compile:.1f}s  "
+              f"compute {roof.compute_s*1e3:.2f}ms  "
+              f"memory {roof.memory_s*1e3:.2f}ms  "
+              f"collective {roof.collective_s*1e3:.2f}ms  "
+              f"dominant={roof.dominant}  "
+              f"MF-ratio={record['model_flops_ratio'] and round(record['model_flops_ratio'],3)}  "
+              f"peak/dev={mem.get('peak_bytes_est', 0)/2**30:.2f}GiB")
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{record['mesh']}__{tag}.json"
+        (RESULTS_DIR / fname).write_text(json.dumps(record, indent=1))
+    del compiled, lowered
+    gc.collect()
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--fsdp", default=None,
+                    type=lambda s: s.lower() in ("1", "true"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    targets = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else cells(arch))
+        for shape in shapes:
+            if shape.name in get_config(arch).skip_shapes:
+                print(f"SKIP {arch} x {shape.name} (documented skip)")
+                continue
+            meshes = {"pod": [False], "multipod": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                targets.append((arch, shape.name, mp))
+
+    failures = []
+    for arch, shape_name, mp in targets:
+        mesh_name = "2x16x16" if mp else "16x16"
+        out = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}__{args.tag}.json"
+        if args.skip_existing and out.exists():
+            print(f"skip existing {out.name}")
+            continue
+        try:
+            run_cell(arch, shape_name, multi_pod=mp, remat=args.remat,
+                     attn_impl=args.attn_impl, fsdp=args.fsdp,
+                     microbatches=args.microbatches, tag=args.tag)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape_name, mesh_name, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"dry-run complete: {len(targets)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

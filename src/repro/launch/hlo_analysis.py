@@ -1,0 +1,355 @@
+"""While-aware analyzer for optimized HLO text.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE, not x trip_count, so
+``compiled.cost_analysis()`` grossly under-reports FLOPs/bytes for scanned
+layer stacks (verified empirically: llama3-8b train reported 8.8x fewer
+FLOPs than 6*N*D). This module re-derives:
+
+  * FLOPs        — from ``dot`` ops (2 * prod(out_dims) * prod(contract_dims))
+  * HBM traffic  — per-instruction operand+output bytes with special handling
+                   for dynamic-slice / dynamic-update-slice / fusions (models
+                   perfect elementwise fusion: only instruction-surface bytes
+                   touch HBM)
+  * collective link bytes — ring-model factors per op with replica-group size
+
+Each computation's totals are multiplied by the product of enclosing while
+trip counts (parsed from ``backend_config={"known_trip_count":...}``),
+walking the call graph from ENTRY through while bodies and calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(?P<shape>.*?)\s"
+    r"(?P<op>[a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "opt-barrier", "call",
+})
+
+
+def _shapes(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _nbytes(shapes: List[Tuple[str, List[int]]]) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    shape_txt: str
+    operands: List[str]
+    attrs: str
+
+    def out_shapes(self):
+        return _shapes(self.shape_txt)
+
+    def out_bytes(self) -> float:
+        return _nbytes(self.out_shapes())
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+    params: Dict[str, str]  # param name -> shape text (from signature)
+
+
+def _split_operands_attrs(line: str, op_start: int) -> Tuple[str, str]:
+    """Given index of the op's '(' return (operand_text, attr_text)."""
+    depth = 0
+    i = op_start
+    while i < len(line):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[op_start + 1:i], line[i + 1:]
+        i += 1
+    return line[op_start + 1:], ""
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                name = hdr.group(2)
+                params: Dict[str, str] = {}
+                sig = line.split("->")[0]
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?))", sig):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(name, bool(hdr.group(1)), [], {}, params)
+                comps[name] = cur
+                if hdr.group(1):
+                    entry = name
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_txt, op = m.group(1), m.group("shape"), m.group("op")
+        op_paren = m.end() - 1
+        operand_txt, attrs = _split_operands_attrs(line, op_paren)
+        operands = _OPERAND_RE.findall(operand_txt)
+        instr = Instr(name, op, shape_txt, operands, attrs)
+        cur.instrs.append(instr)
+        cur.by_name[name] = instr
+    return comps, entry
+
+
+def _operand_bytes(comp: Computation, ref: str) -> float:
+    if ref in comp.by_name:
+        return comp.by_name[ref].out_bytes()
+    if ref in comp.params:
+        return _nbytes(_shapes(comp.params[ref]))
+    return 0.0
+
+
+def _operand_shape(comp: Computation, ref: str):
+    if ref in comp.by_name:
+        return comp.by_name[ref].out_shapes()
+    if ref in comp.params:
+        return _shapes(comp.params[ref])
+    return []
+
+
+def _group_size(attrs: str) -> int:
+    g = _GROUPS_ARR_RE.search(attrs)
+    if g:
+        return int(g.group(2))
+    gl = _GROUPS_LIST_RE.search(attrs)
+    if gl:
+        return max(1, len([x for x in gl.group(1).split(",") if x.strip()]))
+    return 1
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out = ins.out_shapes()
+    out_elems = 1.0
+    for _, dims in out:
+        for d in dims:
+            out_elems *= d
+    k = 1.0
+    cd = _LHS_CDIMS_RE.search(ins.attrs)
+    if cd and ins.operands:
+        lhs = _operand_shape(comp, ins.operands[0])
+        if lhs:
+            _, dims = lhs[0]
+            for idx in (int(x) for x in cd.group(1).split(",") if x):
+                if idx < len(dims):
+                    k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _fusion_traffic(comps: Dict[str, Computation], comp: Computation,
+                    ins: Instr) -> float:
+    """Surface HBM traffic of a fusion: params (dynamic-slice aware) + out."""
+    cm = _CALLS_RE.search(ins.attrs)
+    fused = comps.get(cm.group(1)) if cm else None
+    total = 0.0
+    if fused is None:
+        total = sum(_operand_bytes(comp, o) for o in set(ins.operands))
+        return total + ins.out_bytes()
+    # map fusion operand i -> fused parameter instruction
+    param_instrs = [i for i in fused.instrs if i.op == "parameter"]
+    # order of parameters follows parameter(N) index == operand order
+    for idx, op_ref in enumerate(ins.operands):
+        full = _operand_bytes(comp, op_ref)
+        pi = param_instrs[idx] if idx < len(param_instrs) else None
+        if pi is not None:
+            consumers = [i for i in fused.instrs if pi.name in i.operands]
+            if consumers and all(c.op == "dynamic-slice" for c in consumers):
+                full = sum(c.out_bytes() for c in consumers)
+        total += full
+    root = fused.instrs[-1] if fused.instrs else None
+    if root is not None and root.op == "dynamic-update-slice":
+        upd = (_operand_shape(fused, root.operands[1])
+               if len(root.operands) > 1 else [])
+        total += 2.0 * _nbytes(upd)
+    else:
+        total += ins.out_bytes()
+    return total
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+# named scopes we attribute bytes/flops to (kernelization candidates)
+SCOPES = ("flash_attention", "ssd_scan", "rglru_scan", "moe_dispatch")
+
+
+def _scope_of(attrs: str) -> Optional[str]:
+    m = _META_RE.search(attrs)
+    if not m:
+        return None
+    name = m.group(1)
+    for s in SCOPES:
+        if s in name:
+            return s
+    return None
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_link_bytes: float = 0.0
+    collective_bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    dot_count: int = 0
+    unknown_trip_whiles: int = 0
+    bytes_by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def _add_scope(self, attrs: str, nbytes: float, nflops: float = 0.0):
+        s = _scope_of(attrs)
+        if s:
+            self.bytes_by_scope[s] = self.bytes_by_scope.get(s, 0.0) + nbytes
+            if nflops:
+                self.flops_by_scope[s] = (self.flops_by_scope.get(s, 0.0)
+                                          + nflops)
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+    # accumulate multipliers over the while/call graph
+    mult: Dict[str, float] = {}
+    stack = [(entry, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = float(tm.group(1))
+                else:
+                    stats.unknown_trip_whiles += 1
+                bm = _BODY_RE.search(ins.attrs)
+                if bm:
+                    stack.append((bm.group(1), m * trip))
+            elif ins.op == "call":
+                cm = _CALLS_RE.search(ins.attrs) or (
+                    _OPERAND_RE.search(ins.attrs))
+                tgt = _CALLS_RE.search(ins.attrs)
+                if tgt:
+                    stack.append((tgt.group(1), m))
+            elif ins.op == "conditional":
+                for br in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%([\w.\-]+))",
+                                      ins.attrs):
+                    for g in br.groups():
+                        if g:
+                            for t in _OPERAND_RE.findall(g) or [g]:
+                                stack.append((t, m))
+
+    for name, m in mult.items():
+        comp = comps[name]
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                fl = m * _dot_flops(comp, ins)
+                by = m * (
+                    sum(_operand_bytes(comp, o) for o in set(ins.operands))
+                    + ins.out_bytes())
+                stats.flops += fl
+                stats.dot_count += 1
+                stats.bytes += by
+                stats._add_scope(ins.attrs, by, fl)
+                continue
+            coll = [c for c in COLLECTIVES if op in (c, c + "-start")]
+            if coll:
+                base = coll[0]
+                n = _group_size(ins.attrs)
+                out_b = ins.out_bytes()
+                if base == "all-reduce":
+                    payload, factor = out_b, 2.0 * (n - 1) / max(n, 1)
+                elif base == "all-gather":
+                    payload, factor = out_b, (n - 1) / max(n, 1)
+                elif base == "reduce-scatter":
+                    payload, factor = out_b * n, (n - 1) / max(n, 1)
+                elif base == "all-to-all":
+                    payload, factor = out_b, (n - 1) / max(n, 1)
+                else:  # collective-permute
+                    payload, factor = out_b, 1.0
+                link = m * payload * factor
+                stats.collective_link_bytes += link
+                stats.collective_bytes_by_op[base] = (
+                    stats.collective_bytes_by_op.get(base, 0.0) + link)
+                stats.collective_counts[base] = (
+                    stats.collective_counts.get(base, 0) + int(m))
+                stats.bytes += m * 2.0 * out_b
+                continue
+            if op.endswith("-done") or op in _SKIP_OPS:
+                continue
+            if op == "fusion":
+                by = m * _fusion_traffic(comps, comp, ins)
+            elif op == "dynamic-slice":
+                by = m * 2.0 * ins.out_bytes()
+            elif op == "dynamic-update-slice":
+                upd = (_operand_shape(comp, ins.operands[1])
+                       if len(ins.operands) > 1 else [])
+                by = m * 2.0 * _nbytes(upd)
+            else:
+                by = m * (
+                    sum(_operand_bytes(comp, o) for o in set(ins.operands))
+                    + ins.out_bytes())
+            stats.bytes += by
+            stats._add_scope(ins.attrs, by)
+    return stats

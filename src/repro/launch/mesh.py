@@ -1,0 +1,43 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). The single-pod mesh is 16x16 = 256 chips ("data","model");
+the multi-pod mesh is 2x16x16 = 512 chips ("pod","data","model").
+``make_mesh_for`` generalizes to arbitrary device counts for elastic
+re-meshing (see train/elastic.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(num_devices: int, *, model_parallelism: int = 16,
+                  pods: int = 1):
+    """Largest (pod, data, model) mesh that fits ``num_devices`` devices."""
+    import jax
+
+    model = model_parallelism
+    while model > 1 and num_devices % model:
+        model //= 2
+    data = num_devices // (model * pods)
+    if data < 1:
+        raise ValueError(
+            f"cannot build mesh: {num_devices} devices, model={model}, "
+            f"pods={pods}")
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,46 @@
+"""Production serving launcher: mesh + sharded params + batched engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import build_model
+from repro.serve import Engine, Request
+from repro.sharding import default_rules, tree_shardings
+from repro.train.elastic import remesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    mesh = remesh(jax.device_count())
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg, max_seq=args.max_len)
+    rules = default_rules(fsdp=False)  # serving: params over model axis only
+
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        p_sh = tree_shardings(model.param_axes(), params, mesh, rules)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        eng = Engine(model, params, slots=args.slots, max_len=args.max_len)
+        for i in range(args.requests):
+            eng.submit(Request(uid=i, prompt=[1 + i, 2 + i],
+                               max_new_tokens=6))
+        eng.run()
+    print(f"served {args.requests} requests on "
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Production training launcher.
+
+Builds the largest viable mesh from the available devices (elastic ladder),
+derives shardings from the rule engine, restores the latest checkpoint
+(resharding onto the current mesh if the fleet changed), and runs the
+jitted train step with async checkpointing + straggler monitoring.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --steps 100 --reduced          # CPU-sized
+On a real TPU fleet drop --reduced; the same code paths run the full
+config on the production mesh.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.data import DataConfig, Pipeline
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.sharding import activation_sharding, default_rules, tree_shardings
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import StragglerMonitor, choose_mesh, remesh
+from repro.train.trainer import init_state, make_train_step, state_axes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    n = jax.device_count()
+    mesh = remesh(n)
+    choice = choose_mesh(n)
+    print(f"devices={n} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}"
+          f" (model_parallelism={choice.model_parallelism})")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg, num_layers=4, d_model=128, d_ff=256)
+    model = build_model(cfg, max_seq=args.seq)
+    opt = AdamW(lr=warmup_cosine(args.lr, 10, args.steps))
+    rules = default_rules(fsdp=cfg.fsdp, multi_pod=(len(mesh.shape) == 3),
+                          strategy=args.strategy)
+
+    with jax.set_mesh(mesh), activation_sharding(mesh, rules):
+        state = init_state(model, opt, jax.random.PRNGKey(0))
+        st_sh = tree_shardings(state_axes(model, opt), state, mesh, rules)
+        state = jax.tree.map(jax.device_put, state, st_sh)
+        step_fn = jax.jit(make_train_step(model, opt),
+                          in_shardings=(st_sh, None),
+                          out_shardings=(st_sh, None),
+                          donate_argnums=(0,))
+
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        start = 0
+        if mgr.latest_step() is not None:
+            # elastic restart: reshards onto whatever mesh we built above
+            state = mgr.restore(state, shardings=st_sh)
+            start = int(mgr.latest_step())
+            print(f"restored step {start} (resharded onto current mesh)")
+
+        data = Pipeline(DataConfig(cfg.vocab_size, args.seq, args.batch),
+                        start_step=start)
+        mon = StragglerMonitor(num_hosts=jax.process_count())
+        t0 = time.time()
+        metrics = {}
+        for i, batch in zip(range(start, args.steps), data):
+            state, metrics = step_fn(state, jax.tree.map(np.asarray, batch))
+            mon.record(jax.process_index(), time.time() - t0)
+            t0 = time.time()
+            if mon.stragglers():
+                print(f"straggler(s) {mon.stragglers()}: would trigger "
+                      f"evict+remesh (see train/elastic.py)")
+            if (i + 1) % args.ckpt_every == 0:
+                mgr.save(i + 1, state)
+            if (i + 1) % 10 == 0:
+                print(f"step {i+1:4d} loss {float(metrics['loss']):.4f}")
+        mgr.save(args.steps, state, blocking=True)
+        data.close()
+        print(f"done @{args.steps}: loss {float(metrics['loss']):.4f}; "
+              f"checkpoints {mgr.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

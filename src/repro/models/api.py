@@ -1,0 +1,151 @@
+"""Public model API: build_model(cfg) -> Model with init/loss/prefill/decode,
+plus ``input_specs(cfg, shape)`` producing ShapeDtypeStruct stand-ins for
+every (architecture x input-shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.common import (Axes, ParamDefs, Params, abstract, axes_of,
+                                 cross_entropy, materialize)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    max_seq: int
+    param_defs: ParamDefs
+
+    # ---- params ---------------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        return materialize(self.param_defs, key, self.cfg.dtype)
+
+    def abstract_params(self) -> Params:
+        return abstract(self.param_defs, self.cfg.dtype)
+
+    def param_axes(self) -> Axes:
+        return axes_of(self.param_defs)
+
+    # ---- cache ----------------------------------------------------------
+    def cache_defs(self, batch: int, max_len: int) -> ParamDefs:
+        return tf.cache_param_defs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return materialize(self.cache_defs(batch, max_len),
+                           jax.random.PRNGKey(0), self.cfg.dtype)
+
+    def abstract_cache(self, batch: int, max_len: int) -> Params:
+        return abstract(self.cache_defs(batch, max_len), self.cfg.dtype)
+
+    def cache_axes(self, batch: int, max_len: int) -> Axes:
+        return axes_of(self.cache_defs(batch, max_len))
+
+    # ---- forward --------------------------------------------------------
+    def forward(self, params: Params, batch: Dict[str, jax.Array], *,
+                mode: str = "train", cache: Optional[Params] = None,
+                cache_pos=None, attn_impl: str = "chunked"):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return tf.encdec_forward(
+                cfg, params, batch["tokens"], frames=batch.get("frames"),
+                enc_out=batch.get("enc_out"), mode=mode, cache=cache,
+                cache_pos=cache_pos, attn_impl=attn_impl)
+        if cfg.family == "hybrid":
+            return tf.hybrid_forward(
+                cfg, params, batch["tokens"], mode=mode, cache=cache,
+                cache_pos=cache_pos, attn_impl=attn_impl)
+        return tf.decoder_forward(
+            cfg, params, batch["tokens"], mode=mode, cache=cache,
+            cache_pos=cache_pos, vision_embeds=batch.get("vision_embeds"),
+            attn_impl=attn_impl)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array], *,
+             attn_impl: str = "chunked") -> jax.Array:
+        logits, _, aux = self.forward(params, batch, mode="train",
+                                      attn_impl=attn_impl)
+        return cross_entropy(logits, batch["labels"],
+                             self.cfg.final_softcap) + aux
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array], *,
+                attn_impl: str = "chunked"):
+        logits, cache, _ = self.forward(params, batch, mode="prefill",
+                                        attn_impl=attn_impl)
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Params, batch:
+                    Dict[str, jax.Array], pos, *, attn_impl: str = "chunked"):
+        logits, new_cache, _ = self.forward(
+            params, batch, mode="decode", cache=cache, cache_pos=pos,
+            attn_impl=attn_impl)
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig, max_seq: int = 4096) -> Model:
+    return Model(cfg=cfg, max_seq=max_seq,
+                 param_defs=tf.model_param_defs(cfg, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+# encoder frame count used for decode-mode whisper cells (encoder runs once
+# at prefill; decode attends to its output)
+WHISPER_DECODE_ENC_LEN = 1536
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train   -> {tokens, labels [, frames | vision_embeds]}
+    prefill -> {tokens [, frames | vision_embeds]}
+    decode  -> {tokens (B,1) [, enc_out]}  (the KV cache spec comes from
+               Model.abstract_cache(batch, seq_len))
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = sds((B, cfg.vision_tokens,
+                                          cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = sds((B, cfg.vision_tokens,
+                                          cfg.d_model), dt)
+        return specs
+    # decode: one new token against a cache of length S
+    specs = {"tokens": sds((B, 1), i32)}
+    if cfg.family == "encdec":
+        specs["enc_out"] = sds((B, WHISPER_DECODE_ENC_LEN, cfg.d_model), dt)
+    return specs
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                key: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    """Concrete random inputs matching input_specs (smoke tests/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, spec.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, jnp.float32
+                                          ).astype(spec.dtype)
+    return out

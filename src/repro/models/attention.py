@@ -1,0 +1,298 @@
+"""GQA attention: flash-style chunked jnp implementation (XLA path) with
+causal/local masking, logit soft-capping, RoPE, and KV-cache prefill/decode.
+
+The Pallas TPU kernel in ``repro.kernels.flash_attention`` implements the
+same contract for the hardware target; ``repro.kernels.ref`` oracles match
+this module.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, ParamDefs, Params, rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def attn_param_defs(cfg: ModelConfig, cross: bool = False) -> ParamDefs:
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs: ParamDefs = {
+        "wq": ParamDef((D, H, hd), ("qkv_in", "heads", "head_dim")),
+        "wk": ParamDef((D, K, hd), ("qkv_in", "kv_heads", "head_dim")),
+        "wv": ParamDef((D, K, hd), ("qkv_in", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "qkv_in")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((K, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((K, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window, kv_len) -> jax.Array:
+    """Additive mask bias (0 or NEG_INF). q_pos (Sq,), k_pos (Bk,).
+
+    ``window`` may be a python int (0 = global) or a traced scalar (scanned
+    stacks with per-layer windows; <= 0 means global).
+    """
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if isinstance(window, int):
+        if window > 0:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+    elif window is not None:
+        w = jnp.asarray(window)
+        ok &= (w <= 0) | (k_pos[None, :] > q_pos[:, None] - w)
+    if kv_len is not None:
+        ok &= k_pos[None, :] < kv_len
+    ok &= k_pos[None, :] >= 0  # ring-buffer slots may carry pos = -1 (empty)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _blocked_kv(k, v, kv_block):
+    B, Skv, K, hd = k.shape
+    nblk = -(-Skv // kv_block)
+    pad = nblk * kv_block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, kv_block, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, kv_block, K, hd).transpose(1, 0, 2, 3, 4)
+    return kb, vb, nblk
+
+
+def _flash_fwd_scan(q, k, v, win, qoff, kvlen, causal, logit_cap, kv_block,
+                    p_bf16=False):
+    """Forward flash scan. win/qoff/kvlen are f32 scalars (may be traced).
+
+    Returns (out f32 (B,Sq,K,G,hd), lse (B,Sq,K,G)).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = hd ** -0.5
+    qr = q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * scale
+    q_pos = qoff + jnp.arange(Sq, dtype=jnp.float32)
+    kb, vb, _ = _blocked_kv(k, v, kv_block)
+
+    def body(carry, blk):
+        m, l, acc, j = carry
+        kj, vj = blk
+        logits = jnp.einsum("bskgh,btkh->bskgt", qr, kj.astype(jnp.float32))
+        logits = softcap(logits, logit_cap)
+        k_pos = j * kv_block + jnp.arange(kv_block, dtype=jnp.float32)
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=win,
+                          kv_len=kvlen)
+        logits = logits + bias[None, :, None, None, :]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = p.astype(jnp.bfloat16) if p_bf16 else p
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkh->bskgh", pv, vj.astype(pv.dtype)
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new, j + 1.0), None
+
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.float32(0)),
+                                     (kb, vb))
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def flash_attention_jnp(q, k, v, win, qoff, kvlen, causal, logit_cap,
+                        kv_block, p_bf16=False):
+    """Flash attention with a flash-style backward (blockwise recompute).
+
+    Forward saves only (q, k, v, O, LSE); backward re-streams KV blocks,
+    recomputes P, and accumulates dq/dk/dv — the FlashAttention-2 algorithm
+    expressed in XLA. The Pallas kernel (repro.kernels.flash_attention) is
+    the TPU-native version of this same contract. win/qoff/kvlen are f32
+    scalar arrays (traced-safe: per-layer windows and decode positions).
+    """
+    out, _ = _flash_fwd_scan(q, k, v, win, qoff, kvlen, causal, logit_cap,
+                             kv_block, p_bf16)
+    B, Sq, H, hd = q.shape
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _flash_fwd_rule(q, k, v, win, qoff, kvlen, causal, logit_cap, kv_block,
+                    p_bf16=False):
+    out, lse = _flash_fwd_scan(q, k, v, win, qoff, kvlen, causal, logit_cap,
+                               kv_block, p_bf16)
+    B, Sq, H, hd = q.shape
+    o = out.reshape(B, Sq, H, hd).astype(q.dtype)
+    return o, (q, k, v, out, lse, win, qoff, kvlen)
+
+
+def _flash_bwd_rule(causal, logit_cap, kv_block, p_bf16, res, do):
+    q, k, v, out, lse, win, qoff, kvlen = res
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = hd ** -0.5
+    qr = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    dor = do.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    delta = jnp.sum(dor * out, axis=-1)                 # (B,Sq,K,G)
+    q_pos = qoff + jnp.arange(Sq, dtype=jnp.float32)
+    kb, vb, nblk = _blocked_kv(k, v, kv_block)
+
+    def body(carry, blk):
+        dq_acc, j = carry
+        kj, vj = blk                                    # (B,Bk,K,hd)
+        kjf, vjf = kj.astype(jnp.float32), vj.astype(jnp.float32)
+        s_raw = jnp.einsum("bskgh,btkh->bskgt", qr * scale, kjf)
+        s = softcap(s_raw, logit_cap)
+        k_pos = j * kv_block + jnp.arange(kv_block, dtype=jnp.float32)
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=win,
+                          kv_len=kvlen)
+        p = jnp.exp(s + bias[None, :, None, None, :] - lse[..., None])
+        if p_bf16:
+            p = p.astype(jnp.bfloat16).astype(jnp.float32)
+        dp = jnp.einsum("bskgh,btkh->bskgt", dor, vjf)
+        ds = p * (dp - delta[..., None])
+        if logit_cap:
+            # d softcap(s_raw) = 1 - tanh^2(s_raw/cap)
+            t = jnp.tanh(s_raw / logit_cap)
+            ds = ds * (1.0 - t * t)
+        dq_blk = jnp.einsum("bskgt,btkh->bskgh", ds, kjf) * scale
+        dk_blk = jnp.einsum("bskgt,bskgh->btkh", ds, qr) * scale
+        dv_blk = jnp.einsum("bskgt,bskgh->btkh", p, dor)
+        return (dq_acc + dq_blk, j + 1.0), (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+    body = jax.checkpoint(body)
+    with jax.named_scope("flash_attention_bwd"):
+        (dq, _), (dkb, dvb) = jax.lax.scan(body, (dq0, jnp.float32(0)),
+                                           (kb, vb))
+    dq = dq.reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, nblk * kv_block, K, hd)
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, nblk * kv_block, K, hd)
+    dk = dk[:, :Skv].astype(k.dtype)
+    dv = dv[:, :Skv].astype(v.dtype)
+    zero = jnp.zeros((), jnp.float32)
+    return dq, dk, dv, zero, zero, zero
+
+
+flash_attention_jnp.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def chunked_attention(
+    q: jax.Array,          # (B, Sq, H, hd)
+    k: jax.Array,          # (B, Skv, K, hd)
+    v: jax.Array,          # (B, Skv, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    q_offset=0,            # int or traced scalar: position of q[0]
+    kv_len=None,           # valid prefix length of k/v (decode cache)
+    kv_block: int = 512,
+    p_bf16: bool = False,  # bf16 probability matrices (halves P traffic)
+) -> jax.Array:
+    """Flash-style attention (custom-vjp; see flash_attention_jnp)."""
+    Skv = k.shape[1]
+    win = jnp.asarray(0 if window is None else window, jnp.float32)
+    qoff = jnp.asarray(q_offset, jnp.float32)
+    kvlen = jnp.asarray(Skv if kv_len is None else kv_len, jnp.float32)
+    with jax.named_scope("flash_attention"):
+        return flash_attention_jnp(q, k, v, win, qoff, kvlen, causal,
+                                   logit_cap, kv_block, p_bf16)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                    q_offset=0, kv_len=None, k_positions=None) -> jax.Array:
+    """Reference O(S^2)-memory attention (oracle, tiny smoke configs, and
+    ring-buffer decode where key slots carry explicit positions)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    qr = q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * hd ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bskgt", qr, k.astype(jnp.float32))
+    logits = softcap(logits, logit_cap)
+    k_pos = k_positions if k_positions is not None else jnp.arange(Skv)
+    bias = _mask_bias(q_offset + jnp.arange(Sq), k_pos,
+                      causal=causal, window=window, kv_len=kv_len)
+    logits = logits + bias[None, :, None, None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                      # (B, S, D)
+    *,
+    positions: jax.Array,              # (B, S) or (S,)
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"k","v"}: (B,Smax,K,hd)
+    cache_pos=None,                    # decode: scalar write index
+    kv_source: Optional[jax.Array] = None,  # cross-attention source (B,Skv,D)
+    return_kv: bool = False,           # prefill: return computed k/v as cache
+    impl: str = "chunked",
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One attention op incl. projections, RoPE, cache handling."""
+    B, S, D = x.shape
+    src = kv_source if kv_source is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.rope_theta and kv_source is None:
+        pos = positions if positions.ndim > 1 else positions[None, :]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+    new_cache = None
+    kv_len = None
+    q_offset = 0
+    if cache is not None and cache_pos is not None:
+        # decode: write this step's k/v at cache_pos, attend over prefix
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        kv_len = cache_pos + 1
+        q_offset = cache_pos
+    elif return_kv:
+        new_cache = {"k": k, "v": v}  # prefill: engine pads to max_len
+
+    if impl.startswith("chunked"):
+        out = chunked_attention(
+            q, k, v, causal=causal and kv_source is None, window=window,
+            logit_cap=cfg.attn_softcap, q_offset=q_offset, kv_len=kv_len,
+            p_bf16=impl.endswith("bf16"))
+    else:
+        out = naive_attention(
+            q, k, v, causal=causal and kv_source is None, window=window,
+            logit_cap=cfg.attn_softcap, q_offset=q_offset, kv_len=kv_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int,
+               layers: int) -> ParamDefs:
+    """KV cache ParamDefs (stacked over layers)."""
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (layers, batch, max_len, K, hd)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamDef(shape, axes, init="zeros"),
+        "v": ParamDef(shape, axes, init="zeros"),
+    }

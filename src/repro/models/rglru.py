@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * softplus(Lambda) * (-r_t))   with c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Wrapped in the Griffin recurrent block: linear_in -> [gate branch (GeLU)] x
+[conv1d(4) -> RG-LRU branch] -> linear_out. The sequence path runs a
+lax.scan over time blocks; the Pallas kernel (repro.kernels.rglru_scan)
+implements the same recurrence with VMEM-carried state for TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, ParamDefs, Params
+
+_C = 8.0
+
+
+def rglru_param_defs(cfg: ModelConfig) -> ParamDefs:
+    D, R = cfg.d_model, cfg.lru_width
+    W = 4  # temporal conv width (fixed in the paper)
+    return {
+        "w_in_x": ParamDef((D, R), ("ffn_in", "lru")),
+        "w_in_gate": ParamDef((D, R), ("ffn_in", "lru")),
+        "conv_w": ParamDef((W, R), ("conv_w", "lru"), scale=W ** -0.5),
+        "conv_b": ParamDef((R,), ("lru",), init="zeros"),
+        "w_a": ParamDef((R, R), ("lru", "ffn_in"), scale=R ** -0.5),
+        "b_a": ParamDef((R,), ("lru",), init="zeros"),
+        "w_i": ParamDef((R, R), ("lru", "ffn_in"), scale=R ** -0.5),
+        "b_i": ParamDef((R,), ("lru",), init="zeros"),
+        "lam": ParamDef((R,), ("lru",), init="const", const=1.0),
+        "w_out": ParamDef((R, D), ("lru", "ffn_in")),
+    }
+
+
+def rglru_scan(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+               h0: Optional[jax.Array] = None, block: int = 256
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x, r, i: (B, S, R); lam: (R,). Returns (y (B,S,R), h_final (B,R)).
+
+    Blocked: an outer lax.scan over S/block time blocks carries the hidden
+    state; within each (checkpointed) block the linear recurrence
+    h_t = a_t h_{t-1} + b_t is computed by an associative scan (log-depth,
+    TPU-friendly). A flat per-step scan at S=4k stores per-step residuals
+    for backward (measured 87 GiB/dev on recurrentgemma train_4k) and
+    compiles ~6x slower.
+    """
+    B, S, R = x.shape
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = beta * i.astype(jnp.float32) * x.astype(jnp.float32)
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((B, R), jnp.float32))
+
+    def assoc(e1, e2):  # compose two recurrence elements (time order)
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    if S % block or S <= block:
+        with jax.named_scope("rglru_scan"):
+            aa, hh = jax.lax.associative_scan((assoc), (a, gated), axis=1)
+            hh = hh + aa * h_init[:, None, :]
+        return hh.astype(x.dtype), hh[:, -1]
+
+    nb = S // block
+    ab = a.reshape(B, nb, block, R).transpose(1, 0, 2, 3)
+    gb = gated.reshape(B, nb, block, R).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def body(h, inp):
+        a_blk, g_blk = inp                       # (B, Q, R)
+        aa, hh = jax.lax.associative_scan(assoc, (a_blk, g_blk), axis=1)
+        hh = hh + aa * h[:, None, :]             # fold carried state
+        return hh[:, -1], hh
+
+    with jax.named_scope("rglru_scan"):
+        h_final, ys = jax.lax.scan(body, h_init, (ab, gb))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, R)
+    return y.astype(x.dtype), h_final
+
+
+def rglru_block(
+    cfg: ModelConfig,
+    p: Params,
+    u: jax.Array,                                # (B, S, D)
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,  # {"h": (B,R), "conv": (B,W-1,R)}
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, D = u.shape
+    R = cfg.lru_width
+    W = p["conv_w"].shape[0]
+
+    gate = jax.nn.gelu(u @ p["w_in_gate"])       # (B,S,R)
+    x = u @ p["w_in_x"]                          # (B,S,R)
+
+    # depthwise causal conv
+    if state is not None and S == 1:
+        window = jnp.concatenate([state["conv"], x], axis=1)   # (B,W,R)
+        xc = jnp.einsum("bwr,wr->br", window, p["conv_w"]) + p["conv_b"]
+        xc = xc[:, None]
+        conv_tail = window[:, 1:]
+    else:
+        padx = jnp.concatenate(
+            [state["conv"] if state is not None
+             else jnp.zeros((B, W - 1, R), x.dtype), x], axis=1)
+        # shifted-slice sum (avoids the (B,S,W,R) window gather)
+        xc = sum(padx[:, w:w + S] * p["conv_w"][w] for w in range(W))
+        xc = xc + p["conv_b"]
+        conv_tail = padx[:, -(W - 1):]
+
+    r = jax.nn.sigmoid(xc @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xc @ p["w_i"] + p["b_i"])
+    h0 = state["h"] if state is not None else None
+    y, h_final = rglru_scan(xc, r, i, p["lam"], h0)
+
+    out = (y * gate) @ p["w_out"]
+    new_state = None
+    if state is not None or S > 1:
+        new_state = {"h": h_final, "conv": conv_tail}
+    return out, new_state
+
+
+def rglru_state_defs(cfg: ModelConfig, batch: int, n_rec: int) -> ParamDefs:
+    R, W = cfg.lru_width, 4
+    return {
+        "h": ParamDef((n_rec, batch, R), ("stack", "batch", "lru"),
+                      init="zeros", dtype="float32"),
+        "conv": ParamDef((n_rec, batch, W - 1, R),
+                         ("stack", "batch", "conv_w", "lru"), init="zeros"),
+    }

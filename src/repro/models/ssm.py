@@ -1,0 +1,189 @@
+"""Mamba-2 SSD (state-space duality) block: chunked parallel scan.
+
+Faithful to Dao & Gu (arXiv:2405.21060): per-head scalar A, data-dependent
+dt (softplus), shared B/C projections (n_groups=1), depthwise short conv on
+(x, B, C), gated output. The chunked algorithm splits the sequence into
+chunks; intra-chunk terms are quadratic einsums, inter-chunk state is a
+lax.scan (TPU-friendly: the Pallas kernel in ``repro.kernels.ssd_scan``
+implements the same chunk computation with VMEM-carried state).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, ParamDefs, Params
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_param_defs(cfg: ModelConfig) -> ParamDefs:
+    D = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    assert d_inner == H * P, (d_inner, H, P)
+    d_xbc = d_inner + 2 * N
+    return {
+        "w_in_z": ParamDef((D, d_inner), ("ffn_in", "ssm_inner")),
+        "w_in_xbc": ParamDef((D, d_xbc), ("ffn_in", "ssm_inner")),
+        "w_in_dt": ParamDef((D, H), ("ffn_in", "ssm_heads")),
+        "conv_w": ParamDef((cfg.ssm_conv_width, d_xbc), ("conv_w", "ssm_inner"),
+                           scale=cfg.ssm_conv_width ** -0.5),
+        "conv_b": ParamDef((d_xbc,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="const", const=0.0),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "D_skip": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "w_out": ParamDef((d_inner, D), ("ssm_inner", "ffn_in")),
+        "norm_g": ParamDef((d_inner,), ("ssm_inner",), init="zeros"),
+    }
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan (single lax.scan over chunks, O(one chunk) temps).
+
+    x: (b, S, H, P) values; dt: (b, S, H) positive; A: (H,) negative;
+    B, C: (b, S, N). Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    dtA = dt * A  # (b,S,H)
+    xr = x.reshape(b, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(b, nc, chunk, H).transpose(1, 0, 2, 3)
+    ar = dtA.reshape(b, nc, chunk, H).transpose(1, 0, 2, 3)
+    Br = B.reshape(b, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cr = C.reshape(b, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+
+    def body(s, inp):
+        # Einsums are pre-factored into 2-operand contractions so XLA never
+        # materializes a (b,Q,Q,H,P) intermediate — the unfactored 4-operand
+        # forms cost 97% of the step's HBM traffic (measured 143 TB/device
+        # on mamba2 train_4k; see EXPERIMENTS.md §Perf iteration M1).
+        xc, dtc, ac, Bc, Cc = inp          # (b,Q,H,P) (b,Q,H) (b,Q,H) (b,Q,N)
+        xf = xc.astype(jnp.float32)
+        dtf = dtc.astype(jnp.float32)
+        Bf, Cf = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+        cum = jnp.cumsum(ac.astype(jnp.float32), axis=1)      # (b,Q,H)
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+        li = cum[:, :, None, :] - cum[:, None, :, :]          # (b,Q,Q,H)
+        Ldecay = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cf, Bf)               # (b,Q,Q)
+        w = cb[..., None] * Ldecay * dtf[:, None, :, :]       # (b,Q,Q,H)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", w, xf)
+        # inter-chunk: y_i += exp(cum_i) * (C_i . s_prev)
+        y_off = jnp.einsum("bin,bhpn->bihp", Cf, s) \
+            * jnp.exp(cum)[..., None]
+        # state update: s = exp(cum_Q)*s + sum_j exp(cum_Q-cum_j) dt_j B_j x_j
+        dstates = jnp.exp(cum[:, -1:, :] - cum) * dtf         # (b,Q,H)
+        xw = xf * dstates[..., None]                          # (b,Q,H,P)
+        s_inc = jnp.einsum("bjn,bjhp->bhpn", Bf, xw)
+        s_new = s * jnp.exp(cum[:, -1, :])[..., None, None] + s_inc
+        return s_new, (y_diag + y_off).astype(x.dtype)
+
+    # checkpoint the chunk body: backward recomputes the (Q,Q,H) intra-chunk
+    # tensors per chunk instead of storing them for every chunk (measured
+    # 323 GiB/dev on mamba2 train_4k without this)
+    body = jax.checkpoint(body)
+    with jax.named_scope("ssd_scan"):
+        s_final, ys = jax.lax.scan(body, s0.astype(jnp.float32),
+                                   (xr, dtr, ar, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S, H, P)
+    return y, s_final  # state stays f32 across steps
+
+
+def _gated_rmsnorm(x, z, g, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    return (x * (1 + g.astype(jnp.float32))).astype(dt)
+
+
+def ssm_block(
+    cfg: ModelConfig,
+    p: Params,
+    u: jax.Array,                           # (B, S, D)
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,  # decode: conv+ssm state
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full mamba2 mixer. In decode mode (S==1) uses the recurrent path."""
+    B, S, D = u.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    W = cfg.ssm_conv_width
+
+    z = u @ p["w_in_z"]                     # (B,S,d_inner)
+    xbc = u @ p["w_in_xbc"]                 # (B,S,d_inner+2N)
+    dt_raw = u @ p["w_in_dt"]               # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if state is not None and S == 1:
+        # ---- decode: O(1) recurrent update -----------------------------
+        window = jnp.concatenate([state["conv"], xbc], axis=1)         # (B,W,d_xbc)
+        xbc_t = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+        xbc_t = jax.nn.silu(xbc_t)[:, None]                            # (B,1,d_xbc)
+        x, Bm, Cm = jnp.split(xbc_t, [d_inner, d_inner + N], axis=-1)
+        xh = x.reshape(B, H, P)
+        dt1 = dt[:, 0]                                                 # (B,H)
+        decay = jnp.exp(dt1 * A)                                       # (B,H)
+        s = state["ssm"].astype(jnp.float32)                           # (B,H,P,N)
+        s = s * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt1, xh.astype(jnp.float32),
+            Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", s, Cm[:, 0].astype(jnp.float32))
+        y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(B, 1, d_inner).astype(u.dtype)
+        y = _gated_rmsnorm(y, z, p["norm_g"])
+        out = y @ p["w_out"]
+        new_state = {"conv": window[:, 1:] if W > 1 else window[:, :0],
+                     "ssm": s}  # f32 state
+        return out, new_state
+
+    # ---- train / prefill: depthwise causal conv + chunked SSD ----------
+    # shifted-slice sum instead of an (B,S,W,d) window gather (W x memory)
+    pad = jnp.zeros((B, W - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    conv_acc = sum(xbc_pad[:, w:w + S] * p["conv_w"][w]
+                   for w in range(W))
+    xbc_c = jax.nn.silu(conv_acc + p["conv_b"])
+    x, Bm, Cm = jnp.split(xbc_c, [d_inner, d_inner + N], axis=-1)
+    xh = x.reshape(B, S, H, P)
+
+    init = state["ssm"] if state is not None else None
+    y, s_final = ssd_chunked(xh, dt.astype(xh.dtype), A.astype(xh.dtype),
+                             Bm, Cm, min(cfg.ssm_chunk, S), initial_state=init)
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_inner)
+    y = _gated_rmsnorm(y, z, p["norm_g"])
+    out = y @ p["w_out"]
+
+    new_state = None
+    if state is not None or S > 1:
+        conv_tail = xbc_pad[:, -(W - 1):] if W > 1 else xbc_pad[:, :0]
+        new_state = {"conv": conv_tail, "ssm": s_final}
+    return out, new_state
+
+
+def ssm_state_defs(cfg: ModelConfig, batch: int, layers: int) -> ParamDefs:
+    d_inner, H, P, N = ssm_dims(cfg)
+    d_xbc = d_inner + 2 * N
+    W = cfg.ssm_conv_width
+    return {
+        "conv": ParamDef((layers, batch, W - 1, d_xbc),
+                         ("layers", "batch", "conv_w", "ssm_inner"),
+                         init="zeros"),
+        "ssm": ParamDef((layers, batch, H, P, N),
+                        ("layers", "batch", "ssm_heads", "ssm_head_dim",
+                         "ssm_state"), init="zeros", dtype="float32"),
+    }

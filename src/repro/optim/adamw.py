@@ -1,0 +1,95 @@
+"""AdamW with optional f32 master weights, global-norm clipping.
+
+Functional, pytree-based (no optax dependency). Optimizer state carries the
+same logical axes as the parameters so FSDP sharding extends to m/v/master.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_weights: bool = True
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if self.master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def abstract_state(self, params) -> Dict[str, Any]:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        state = {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if self.master_weights:
+            state["master"] = jax.tree.map(f32, params)
+        return state
+
+    def state_axes(self, param_axes) -> Dict[str, Any]:
+        state = {
+            "m": param_axes,
+            "v": param_axes,
+            "count": (),
+        }
+        if self.master_weights:
+            state["master"] = param_axes
+        return state
+
+    def update(self, grads, state, params
+               ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if self.clip_norm else 1.0
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        count = state["count"] + 1
+        lr = self.lr(count)
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+
+        new_m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                             state["m"], grads)
+        new_v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                             state["v"], grads)
+
+        base = state["master"] if self.master_weights else params
+
+        def step(p, m, v):
+            upd = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            return (p.astype(jnp.float32)
+                    - lr * (upd + self.weight_decay * p.astype(jnp.float32)))
+
+        new_base = jax.tree.map(step, base, new_m, new_v)
+        new_params = jax.tree.map(
+            lambda b, p: b.astype(p.dtype), new_base, params)
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        if self.master_weights:
+            new_state["master"] = new_base
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (activation_sharding, constrain,
+                                  default_rules, spec_for, tree_specs,
+                                  tree_shardings)
+
+__all__ = ["activation_sharding", "constrain", "default_rules", "spec_for",
+           "tree_specs", "tree_shardings"]

@@ -1,0 +1,184 @@
+"""Core NVM stack: bitcells, cache model, tuner, workloads, profiles."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitcell import (SOT, SOT_DEVICE, STT, STT_DEVICE,
+                                characterize, fin_sweep, switching_time_ns)
+from repro.core.cache_model import (ACCESS_TYPES, BANKS, ROWS, design_grid,
+                                    evaluate_config)
+from repro.core.profiles import TRAFFIC, paper_profiles, profile
+from repro.core.tuner import iso_area_capacity, tune, tune_all
+from repro.core.workloads import HPCG, NETWORKS
+
+TABLE2 = {
+    ("SRAM", 3): dict(read_latency_ns=2.91, write_latency_ns=1.53,
+                      read_energy_nj=0.35, write_energy_nj=0.32,
+                      leakage_mw=6442, area_mm2=5.53),
+    ("STT", 3): dict(read_latency_ns=2.98, write_latency_ns=9.31,
+                     read_energy_nj=0.81, write_energy_nj=0.31,
+                     leakage_mw=748, area_mm2=2.34),
+    ("STT", 7): dict(read_latency_ns=4.58, write_latency_ns=10.06,
+                     read_energy_nj=0.93, write_energy_nj=0.43,
+                     leakage_mw=1706, area_mm2=5.12),
+    ("SOT", 3): dict(read_latency_ns=3.71, write_latency_ns=1.38,
+                     read_energy_nj=0.49, write_energy_nj=0.22,
+                     leakage_mw=527, area_mm2=1.95),
+    ("SOT", 10): dict(read_latency_ns=6.69, write_latency_ns=2.47,
+                      read_energy_nj=0.51, write_energy_nj=0.40,
+                      leakage_mw=1434, area_mm2=5.64),
+}
+
+
+# --- bitcell ---------------------------------------------------------------
+
+
+def test_table1_published_values():
+    assert STT.write_latency_set_ps == 8400
+    assert SOT.write_latency_set_ps == 313
+    assert STT.area_rel_sram == 0.34 and SOT.area_rel_sram == 0.29
+    assert SOT.sense_energy_pj < STT.sense_energy_pj
+
+
+def test_characterization_reproduces_table1():
+    stt = characterize(STT_DEVICE, write_fins=4, read_fins=4, sot=False)
+    sot = characterize(SOT_DEVICE, write_fins=3, read_fins=1, sot=True)
+    assert abs(stt.write_latency_ps / STT.write_latency_ps - 1) < 0.15
+    assert abs(sot.write_latency_ps / SOT.write_latency_ps - 1) < 0.15
+    assert abs(stt.sense_latency_ps / STT.sense_latency_ps - 1) < 0.15
+    # write energy within 2x (driver overheads are first-order modeled)
+    assert 0.5 < stt.write_energy_pj / STT.write_energy_pj < 2.0
+    assert 0.5 < sot.write_energy_pj / SOT.write_energy_pj < 2.0
+
+
+def test_fin_sweep_tradeoff():
+    cells = fin_sweep(STT_DEVICE, sot=False)
+    lats = [c.write_latency_ps for c in cells]
+    areas = [c.area_rel_sram for c in cells]
+    assert lats == sorted(lats, reverse=True)   # more fins -> faster
+    assert areas == sorted(areas)               # ...and bigger
+
+
+def test_switching_time_diverges_at_ic0():
+    assert switching_time_ns(STT_DEVICE, STT_DEVICE.ic0_ua) == float("inf")
+    assert switching_time_ns(STT_DEVICE, 4 * STT_DEVICE.ic0_ua) < 3.0
+
+
+# --- cache model vs Table 2 -------------------------------------------------
+
+
+@pytest.mark.parametrize("key", list(TABLE2))
+def test_table2_anchor(key):
+    mem, cap = key
+    ppa = tune(mem, cap)
+    for field, target in TABLE2[key].items():
+        pred = getattr(ppa, field)
+        err = abs(math.log(pred / target))
+        assert err < 0.45, (key, field, pred, target)
+
+
+def test_table2_mean_error_small():
+    errs = []
+    for (mem, cap), tgt in TABLE2.items():
+        ppa = tune(mem, cap)
+        errs += [abs(math.log(getattr(ppa, f) / t)) for f, t in tgt.items()]
+    assert sum(errs) / len(errs) < 0.15
+
+
+def test_iso_area_capacity_gain():
+    sram = tune("SRAM", 3)
+    stt = iso_area_capacity("STT", sram.area_mm2)
+    sot = iso_area_capacity("SOT", sram.area_mm2)
+    # paper: 2.3x / 3.3x capacity at iso-area
+    assert 1.8 <= stt.capacity_mb / 3 <= 3.2
+    assert 2.6 <= sot.capacity_mb / 3 <= 4.4
+    assert sot.capacity_mb > stt.capacity_mb
+
+
+def test_tuner_picks_edap_minimum_among_candidates():
+    """Algorithm 1 selects the EDAP-best among per-objective argmin
+    candidates — close to, but not necessarily equal to, the global grid
+    minimum (faithful to the published pseudocode)."""
+    grid = design_grid("STT", 4)
+    best = tune("STT", 4)
+    gmin = min(p.edap for p in grid)
+    assert gmin <= best.edap <= 1.15 * gmin
+
+
+@given(cap=st.sampled_from([1, 2, 3, 4, 8, 16, 32]),
+       mem=st.sampled_from(["SRAM", "STT", "SOT"]))
+@settings(max_examples=20, deadline=None)
+def test_cache_physics_properties(cap, mem):
+    ppa = tune(mem, cap)
+    assert ppa.area_mm2 > 0 and ppa.leakage_mw > 0
+    assert ppa.read_latency_ns > 0 and ppa.write_latency_ns > 0
+    bigger = tune(mem, cap * 2) if cap < 32 else None
+    if bigger:
+        assert bigger.area_mm2 > ppa.area_mm2
+        assert bigger.leakage_mw > ppa.leakage_mw
+
+
+def test_mram_denser_and_lower_leak_than_sram():
+    for cap in (2, 8, 32):
+        s, t, o = tune("SRAM", cap), tune("STT", cap), tune("SOT", cap)
+        assert t.area_mm2 < s.area_mm2 and o.area_mm2 < s.area_mm2
+        assert t.leakage_mw < s.leakage_mw and o.leakage_mw < s.leakage_mw
+
+
+def test_tune_all_shape():
+    out = tune_all()
+    assert set(out) == {"SRAM", "STT", "SOT"}
+    assert all(len(v) == 6 for v in out.values())
+
+
+# --- workloads / profiles ----------------------------------------------------
+
+
+TABLE3 = {"AlexNet": (61e6, 724e6), "GoogLeNet": (7e6, 1.43e9),
+          "VGG-16": (138e6, 15.5e9), "ResNet-18": (11.8e6, 2.0e9),
+          "SqueezeNet": (1.2e6, 837e6)}
+
+
+@pytest.mark.parametrize("name", list(TABLE3))
+def test_table3_totals(name):
+    net = NETWORKS[name]
+    w_t, m_t = TABLE3[name]
+    assert abs(net.total_weights / w_t - 1) < 0.1, net.total_weights
+    assert abs(net.total_macs / m_t - 1) < 0.15, net.total_macs
+
+
+def test_table3_layer_counts():
+    assert NETWORKS["AlexNet"].conv_layers == 5
+    assert NETWORKS["AlexNet"].fc_layers == 3
+    assert NETWORKS["VGG-16"].conv_layers == 13
+    assert NETWORKS["GoogLeNet"].conv_layers == 57
+    assert NETWORKS["SqueezeNet"].fc_layers == 0
+
+
+def test_rw_ratios_in_fig3_range():
+    for p in paper_profiles():
+        assert 1.4 <= p.rw_ratio <= 26.5, (p.label, p.rw_ratio)
+
+
+def test_batch_trends():
+    tr = [profile("AlexNet", "training", b).rw_ratio for b in (4, 16, 64)]
+    inf = [profile("AlexNet", "inference", b).rw_ratio for b in (4, 16, 64)]
+    assert tr[0] < tr[-1], "training should get MORE read-dominant"
+    assert inf[0] > inf[-1], "inference should get LESS read-dominant"
+
+
+@given(batch=st.integers(min_value=1, max_value=256))
+@settings(max_examples=20, deadline=None)
+def test_profile_positive(batch):
+    p = profile("ResNet-18", "training", batch)
+    assert p.l2_reads > 0 and p.l2_writes > 0 and p.dram >= 0
+
+
+def test_hpcg_pooled_read_energy_share():
+    # paper: reads are 96% of HPCG dynamic energy with SRAM energies
+    profs = [profile(n, "hpc", 1) for n in HPCG]
+    r = sum(p.l2_reads for p in profs)
+    w = sum(p.l2_writes for p in profs)
+    share = r * 0.35 / (r * 0.35 + w * 0.32)
+    assert share > 0.9

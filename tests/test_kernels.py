@@ -1,0 +1,108 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,K,Sq,Skv,hd,causal,window,cap,bq,bk",
+    [
+        (1, 4, 2, 128, 128, 64, True, 0, 0.0, 64, 64),
+        (2, 4, 4, 64, 64, 32, True, 0, 0.0, 32, 32),
+        (1, 6, 2, 128, 128, 64, True, 48, 0.0, 64, 64),     # local window
+        (1, 4, 1, 64, 64, 128, True, 0, 50.0, 32, 32),      # softcap + MQA
+        (1, 2, 2, 64, 128, 64, False, 0, 0.0, 64, 64),      # cross attn
+    ])
+def test_flash_attention_sweep(dtype, B, H, K, Sq, Skv, hd, causal, window,
+                               cap, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, H, Sq, hd), dtype)
+    k = _rand(ks[1], (B, K, Skv, hd), dtype)
+    v = _rand(ks[2], (B, K, Skv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              logit_cap=cap, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   logit_cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,P,N,chunk", [
+    (1, 2, 64, 16, 8, 16),
+    (2, 4, 128, 32, 16, 32),
+    (1, 1, 64, 64, 32, 64),   # single chunk
+])
+def test_ssd_scan_sweep(dtype, B, H, S, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = _rand(ks[0], (B, H, S, P), dtype)
+    dt = jax.nn.softplus(_rand(ks[1], (B, H, S), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,))) * 0.3
+    dtA = (dt * A[None, :, None]).astype(jnp.float32)
+    Bm = _rand(ks[2], (B, S, N), dtype)
+    Cm = _rand(ks[3], (B, S, N), dtype)
+    out = ops.ssd_scan(x, dt.astype(dtype), dtA.astype(dtype), Bm, Cm,
+                       chunk=chunk)
+    want = ref.ssd_scan_ref(x, dt.astype(dtype), dtA.astype(dtype), Bm, Cm)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,R,block,wt", [
+    (1, 128, 128, 32, 64),
+    (2, 256, 256, 64, 128),
+    (1, 64, 512, 64, 512),
+])
+def test_rglru_scan_sweep(dtype, B, S, R, block, wt):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    a = jax.nn.sigmoid(_rand(ks[0], (B, S, R), jnp.float32)).astype(dtype)
+    b = (_rand(ks[1], (B, S, R), jnp.float32) * 0.1).astype(dtype)
+    out = ops.rglru_scan(a, b, block=block, width_tile=wt)
+    want = ref.rglru_scan_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("nsets,ways,tile,n", [
+    (32, 4, 8, 1500),
+    (64, 8, 64, 1500),
+    (16, 16, 16, 800),
+])
+def test_cache_sim_sweep(nsets, ways, tile, n):
+    rng = np.random.RandomState(nsets)
+    sid = rng.randint(0, nsets, n)
+    tags = rng.zipf(1.4, n) % 500
+    h1, m1 = ops.cache_sim(jnp.asarray(sid), jnp.asarray(tags),
+                           num_sets=nsets, ways=ways, sets_tile=tile)
+    h2, m2 = ref.cache_sim_ref(jnp.asarray(sid), jnp.asarray(tags),
+                               num_sets=nsets, ways=ways)
+    h3, m3 = ref.cache_sim_python(sid, tags, num_sets=nsets, ways=ways)
+    assert (int(h1), int(m1)) == (int(h2), int(m2)) == (h3, m3)
+    assert int(h1) + int(m1) == n
+
+
+def test_cache_sim_bigger_cache_fewer_misses():
+    rng = np.random.RandomState(7)
+    trace = rng.zipf(1.3, 4000) % 2048
+    misses = []
+    for nsets in (16, 64, 256):
+        sid = jnp.asarray(trace % nsets, jnp.int32)
+        tg = jnp.asarray(trace // nsets, jnp.int32)
+        _, m = ref.cache_sim_ref(sid, tg, num_sets=nsets, ways=4)
+        misses.append(int(m))
+    assert misses[0] >= misses[1] >= misses[2]

@@ -1,0 +1,138 @@
+"""Model substrate: per-arch smoke + decode/forward consistency + flash vjp."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced, smoke_shape
+from repro.models import build_model, make_inputs
+from repro.models.attention import chunked_attention, naive_attention
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward/loss on CPU; shapes + finiteness."""
+    cfg = reduced(get_config(arch))
+    m = build_model(cfg, max_seq=64)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, smoke_shape("train"))
+    logits, _, aux = m.forward(params, batch, mode="train")
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss = jax.jit(m.loss)(params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_prefill_decode(arch):
+    cfg = reduced(get_config(arch))
+    m = build_model(cfg, max_seq=64)
+    params = m.init(jax.random.PRNGKey(0))
+    sh = smoke_shape("prefill")
+    batch = make_inputs(cfg, sh)
+    logits, cache = jax.jit(m.prefill)(params, batch)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    db = {"tokens": jnp.zeros((sh.global_batch, 1), jnp.int32)}
+    if cfg.family == "encdec":
+        db["enc_out"] = jnp.zeros((sh.global_batch, 16, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    lg, new_cache = jax.jit(m.decode_step)(params, cache, db, sh.seq_len - 1)
+    assert lg.shape == (sh.global_batch, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "gemma2-27b", "mamba2-1.3b",
+                                  "recurrentgemma-2b", "qwen2-7b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the full forward's logits."""
+    cfg = reduced(get_config(arch), dtype="float32")
+    T = 12
+    m = build_model(cfg, max_seq=T)
+    params = m.init(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, T), 0,
+                                cfg.vocab_size, jnp.int32)
+    full, _, _ = m.forward(params, {"tokens": tokens}, mode="train",
+                           attn_impl="naive")
+    cache = m.init_cache(2, T)
+    step = jax.jit(lambda p, c, b, pos: m.decode_step(p, c, b, pos))
+    for t in range(T):
+        lg, cache = step(params, cache, {"tokens": tokens[:, t:t + 1]}, t)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, t]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = reduced(get_config("whisper-tiny"), dtype="float32")
+    T = 8
+    m = build_model(cfg, max_seq=T)
+    params = m.init(jax.random.PRNGKey(1))
+    frames = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, T), 0,
+                                cfg.vocab_size, jnp.int32)
+    from repro.models.transformer import encoder_forward
+    enc = encoder_forward(cfg, params, frames)
+    full, _, _ = m.forward(params, {"tokens": tokens, "enc_out": enc},
+                           mode="train", attn_impl="naive")
+    cache = m.init_cache(2, T)
+    for t in range(T):
+        lg, cache = m.decode_step(
+            params, cache, {"tokens": tokens[:, t:t + 1], "enc_out": enc}, t)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("causal,window,cap,gqa", [
+    (True, 0, 0.0, 2), (True, 32, 50.0, 1), (False, 0, 0.0, 4),
+])
+def test_flash_vjp_matches_naive(causal, window, cap, gqa):
+    B, Sq, K, hd = 2, 64, 2, 16
+    H = K * gqa
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sq, K, hd))
+    v = jax.random.normal(ks[2], (B, Sq, K, hd))
+
+    def f1(q, k, v):
+        return (chunked_attention(q, k, v, causal=causal, window=window,
+                                  logit_cap=cap, kv_block=16) ** 2).sum()
+
+    def f2(q, k, v):
+        return (naive_attention(q, k, v, causal=causal, window=window,
+                                logit_cap=cap) ** 2).sum()
+
+    np.testing.assert_allclose(f1(q, k, v), f2(q, k, v), rtol=2e-5)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-5)
+
+
+def test_moe_routes_and_balances():
+    cfg = reduced(get_config("granite-moe-3b-a800m"))
+    m = build_model(cfg, max_seq=64)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, smoke_shape("train"))
+    _, _, aux = m.forward(params, batch, mode="train")
+    assert float(aux) > 0  # aux loss present
+    # capacity drop must not NaN
+    loss = m.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_param_counts_plausible():
+    # full configs should land near their nameplate sizes (moonshot's
+    # ASSIGNED dims — 48L x 64e x d_ff 1408 — give ~28B total; its "a3b"
+    # active count is what matches the name, checked below)
+    expected = {"llama3-8b": 8.0e9, "qwen2-7b": 7.6e9,
+                "phi3-mini-3.8b": 3.8e9, "gemma2-27b": 27.2e9,
+                "mamba2-1.3b": 1.3e9, "recurrentgemma-2b": 2.7e9,
+                "moonshot-v1-16b-a3b": 27e9}
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert 0.6 < got / n < 1.45, (arch, got, n)
+    active = get_config("moonshot-v1-16b-a3b").active_param_count()
+    assert 2.5e9 < active < 5.5e9  # "a3b"
+    active_g = get_config("granite-moe-3b-a800m").active_param_count()
+    assert active_g < get_config("granite-moe-3b-a800m").param_count()

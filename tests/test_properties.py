@@ -1,0 +1,149 @@
+"""Hypothesis property tests on system invariants (primitives, energy
+model, HLO parser robustness, MoE dispatch conservation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_model import evaluate_config
+from repro.core.energy import evaluate, relative
+from repro.core.profiles import MemoryProfile
+from repro.core.tuner import tune
+from repro.launch.hlo_analysis import analyze_hlo, parse_hlo
+from repro.models.common import rms_norm, rope, softcap
+
+
+# --- primitives -------------------------------------------------------------
+
+
+@given(st.integers(0, 5), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_rope_preserves_norm(seed, heads):
+    """Rotations preserve per-head vector norms."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, 8, heads, 16))
+    pos = jnp.arange(8)
+    y = rope(x, pos[None, :], 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 2, 8))
+    y = rope(x, jnp.zeros((1, 1)), 10000.0)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_rope_is_relative():
+    """<rope(q,p1), rope(k,p2)> depends only on p1 - p2."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot(p1, p2):
+        qr = rope(q, jnp.array([[p1]]), 100.0)
+        kr = rope(k, jnp.array([[p2]]), 100.0)
+        return float(jnp.sum(qr * kr))
+    np.testing.assert_allclose(dot(3, 1), dot(7, 5), rtol=1e-5)
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_rmsnorm_unit_rms(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * 7.0
+    y = rms_norm(x, jnp.zeros(32))
+    rms = np.sqrt(np.mean(np.asarray(y, np.float32) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+@given(st.floats(1.0, 100.0), st.floats(-1e4, 1e4))
+@settings(max_examples=30, deadline=None)
+def test_softcap_bounded_and_monotone(cap, v):
+    eps = 1e-5 * cap
+    y = float(softcap(jnp.float32(v), cap))
+    assert abs(y) <= cap + eps
+    y2 = float(softcap(jnp.float32(v + 1.0), cap))
+    assert y2 >= y - eps  # non-decreasing up to f32 rounding
+
+
+# --- energy model invariants --------------------------------------------------
+
+
+@given(reads=st.floats(1e3, 1e9), writes=st.floats(1e3, 1e9),
+       dram=st.floats(0, 1e7))
+@settings(max_examples=30, deadline=None)
+def test_energy_positive_and_monotone_in_traffic(reads, writes, dram):
+    ppa = tune("STT", 3)
+    p1 = MemoryProfile("w", "hpc", 1, reads, writes, dram)
+    p2 = MemoryProfile("w", "hpc", 1, reads * 2, writes, dram)
+    e1, e2 = evaluate(p1, ppa), evaluate(p2, ppa)
+    assert e1.total_nj > 0 and e1.delay_ns > 0
+    assert e2.dynamic_nj > e1.dynamic_nj
+    assert e2.edp_with_dram > e1.edp_with_dram
+
+
+@given(rw=st.floats(1.0, 30.0))
+@settings(max_examples=20, deadline=None)
+def test_stt_vs_sot_ordering(rw):
+    """SOT's fast writes mean SOT EDP <= STT EDP for any R/W mix."""
+    stt, sot = tune("STT", 3), tune("SOT", 3)
+    p = MemoryProfile("w", "hpc", 1, rw * 1e6, 1e6, 1e4)
+    sram = evaluate(p, tune("SRAM", 3))
+    r_stt = relative(sram, evaluate(p, stt))
+    r_sot = relative(sram, evaluate(p, sot))
+    assert r_sot["edp_with_dram"] <= r_stt["edp_with_dram"] * 1.05
+
+
+def test_evaluate_config_matches_grid_point():
+    p = evaluate_config("SOT", 4, banks=8, rows=1024,
+                        access_type="Normal")
+    assert p.banks == 8 and p.rows == 1024 and p.capacity_mb == 4
+
+
+# --- HLO parser robustness ------------------------------------------------------
+
+
+def test_parse_hlo_ignores_garbage():
+    comps, entry = parse_hlo("not hlo at all\n\nrandom text {}")
+    assert entry is None
+    stats = analyze_hlo("garbage")
+    assert stats.flops == 0 and stats.bytes == 0
+
+
+def test_parse_hlo_on_simple_jit():
+    compiled = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((64, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 16), jnp.float32)).compile()
+    stats = analyze_hlo(compiled.as_text())
+    assert stats.flops == pytest.approx(2 * 64 * 32 * 16)
+    # traffic >= operands + output
+    assert stats.bytes >= (64 * 32 + 32 * 16 + 64 * 16) * 4
+
+
+# --- MoE dispatch conservation ---------------------------------------------------
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_moe_identity_experts_preserve_scale(seed):
+    """With all-equal expert outputs, combine must reproduce gate-weighted
+    identity (no token duplication/loss through dispatch+combine)."""
+    from repro.configs import get_config, reduced
+    from repro.models.common import materialize
+    from repro.models.moe import moe_block, moe_param_defs
+
+    cfg = reduced(get_config("granite-moe-3b-a800m"),
+                  moe_capacity_factor=8.0)  # no drops
+    defs = moe_param_defs(cfg)
+    params = materialize(defs, jax.random.PRNGKey(seed), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100), (2, 16,
+                                                           cfg.d_model))
+    # make every expert the same linear map -> output independent of routing
+    for k in ("w_up", "w_gate", "w_down"):
+        params[k] = jnp.broadcast_to(params[k][:1], params[k].shape)
+    y1, _ = moe_block(cfg, params, x)
+    params2 = dict(params, router=params["router"] * -1.0)  # reroute
+    y2, _ = moe_block(cfg, params2, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-2, atol=2e-3)

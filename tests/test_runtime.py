@@ -1,0 +1,262 @@
+"""Runtime: optimizer, trainer, data pipeline, checkpoint, elastic, serve,
+gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced, smoke_shape
+from repro.data import DataConfig, Pipeline, batch_for_step
+from repro.models import build_model, make_inputs
+from repro.optim import AdamW, constant, warmup_cosine
+from repro.optim.compress import (apply_error_feedback, compressed_psum,
+                                  dequantize, init_error_state, quantize)
+from repro.serve import Engine, Request
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import ElasticEvent, StragglerMonitor, choose_mesh, \
+    plan_recovery
+from repro.train.trainer import init_state, make_train_step
+
+
+# --- optimizer ----------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=constant(0.1), weight_decay=0.0, master_weights=True)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    assert float(m["grad_norm"]) >= 0
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=constant(0.1), clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, m = opt.update({"w": jnp.full(3, 100.0)}, state, params)
+    assert float(m["grad_norm"]) > 1.0  # reported pre-clip
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, 10, 100)
+    assert float(lr(5)) < float(lr(10))
+    assert float(lr(10)) >= float(lr(50)) >= float(lr(100))
+
+
+# --- trainer ------------------------------------------------------------------
+
+
+def test_train_step_reduces_loss():
+    cfg = reduced(get_config("llama3-8b"))
+    model = build_model(cfg, max_seq=64)
+    opt = AdamW(lr=constant(3e-3), weight_decay=0.0)
+    step = jax.jit(make_train_step(model, opt))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, smoke_shape("train"))
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+    assert int(state["step"]) == 8
+
+
+def test_grad_accumulation_equivalence():
+    cfg = reduced(get_config("qwen2-7b"))
+    model = build_model(cfg, max_seq=64)
+    opt = AdamW(lr=constant(1e-3), weight_decay=0.0, clip_norm=0.0)
+    batch = make_inputs(cfg, smoke_shape("train"))
+    s1 = init_state(model, opt, jax.random.PRNGKey(0))
+    s2 = jax.tree.map(lambda x: x, s1)
+    _, m1 = jax.jit(make_train_step(model, opt, microbatches=1))(s1, batch)
+    _, m2 = jax.jit(make_train_step(model, opt, microbatches=2))(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=5e-3)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m2["grad_norm"]), rtol=5e-2)
+
+
+# --- data ---------------------------------------------------------------------
+
+
+def test_data_determinism_and_restart():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8)
+    a = batch_for_step(cfg, 5)
+    b = batch_for_step(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    p = Pipeline(cfg, start_step=0)
+    first = next(p)
+    p.close()
+    np.testing.assert_array_equal(first["tokens"],
+                                  batch_for_step(cfg, 0)["tokens"])
+    p2 = Pipeline(cfg, start_step=3)
+    resumed = next(p2)
+    p2.close()
+    np.testing.assert_array_equal(resumed["tokens"],
+                                  batch_for_step(cfg, 3)["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    c0 = DataConfig(512, 32, 8, num_hosts=2, host_id=0)
+    c1 = DataConfig(512, 32, 8, num_hosts=2, host_id=1)
+    assert c0.host_batch == 4
+    a, b = batch_for_step(c0, 0), batch_for_step(c1, 0)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    assert a["labels"].shape == (4, 32)
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(512, 16, 2)
+    b = batch_for_step(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# --- checkpoint ---------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.int32(7)}
+    for s in (1, 2, 3):
+        mgr.save(s, state, blocking=True)
+    assert mgr.all_steps() == [2, 3]  # retention
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored = mgr.restore(like)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert int(restored["step"]) == 7
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(8.0)}
+    mgr.save(10, state, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored = mgr.restore({"w": jnp.zeros(8)}, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8.0))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros(4)}, blocking=True)
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros(5)})
+
+
+# --- elastic ------------------------------------------------------------------
+
+
+@given(n=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=50, deadline=None)
+def test_choose_mesh_divides(n):
+    c = choose_mesh(n)
+    assert n % (c.model_parallelism * c.pods) == 0
+    assert c.model_parallelism >= 1 and c.pods >= 1
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(num_hosts=4, threshold=1.5, patience=3)
+    for step in range(8):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 3.0)
+        flagged = mon.stragglers()
+    assert flagged == [2]
+
+
+def test_plan_recovery_downscale():
+    choice, action = plan_recovery(
+        ElasticEvent("failure", hosts=[3], new_device_count=224))
+    assert 224 % (choice.model_parallelism * choice.pods) == 0
+    assert action == "evict+remesh"
+
+
+# --- gradient compression -------------------------------------------------------
+
+
+def test_quantize_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_unbiased_over_steps():
+    rng = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(rng, (128,))}
+    err = init_error_state(g)
+    total = jnp.zeros(128)
+    steps = 50
+    for _ in range(steps):
+        comp, err = apply_error_feedback(g, err)
+        total = total + comp["w"]
+    np.testing.assert_allclose(np.asarray(total / steps),
+                               np.asarray(g["w"]), atol=2e-3)
+
+
+def test_compressed_psum_matches_mean():
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    n = jax.local_device_count()
+    mesh = jax.make_mesh((n,), ("dp",))
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 64))
+
+    @jax.jit
+    def run(x):
+        def f(xs):  # xs: (1, 64) local shard
+            return compressed_psum({"g": xs}, "dp")["g"]
+        return shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P("dp")
+                         )(x)
+
+    out = run(x)                      # (n, 64): every row = compressed mean
+    want = x.mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want),
+                               atol=float(jnp.abs(x).max()) / 127 + 1e-6)
+
+
+# --- serving --------------------------------------------------------------------
+
+
+def test_engine_greedy_matches_manual_decode():
+    cfg = reduced(get_config("llama3-8b"), dtype="float32")
+    model = build_model(cfg, max_seq=32)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, slots=2, max_len=32)
+    req = Request(uid=1, prompt=[5, 7, 11], max_new_tokens=4)
+    eng.submit(req)
+    eng.run()
+    assert req.done and len(req.output) == 4
+    # manual greedy rollout
+    cache = model.init_cache(2, 32)
+    seq = [5, 7, 11]
+    pos = 0
+    out = []
+    for _ in range(4 + len(seq) - 1):
+        tok = seq[pos] if pos < len(seq) else out[-1]
+        lg, cache = model.decode_step(
+            params, cache, {"tokens": jnp.full((2, 1), tok, jnp.int32)}, pos)
+        pos += 1
+        if pos >= len(seq):
+            out.append(int(jnp.argmax(lg[0, -1])))
+    assert req.output == out[:4]
+
+
+def test_engine_continuous_batching_frees_slots():
+    cfg = reduced(get_config("llama3-8b"))
+    model = build_model(cfg, max_seq=16)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, slots=1, max_len=16)
+    eng.submit(Request(uid=1, prompt=[1], max_new_tokens=2))
+    eng.submit(Request(uid=2, prompt=[2], max_new_tokens=2))
+    eng.run()
+    assert all(r is None for r in eng.slot_req)

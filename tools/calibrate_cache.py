@@ -1,0 +1,82 @@
+"""Calibrate the NVSim-lite constants against the paper's Table 2 anchors.
+
+Random-restart coordinate descent in log-space over CAL; objective is the
+mean |log(pred/target)| over the 30 Table-2 numbers (EDAP-tuned configs).
+Run: PYTHONPATH=src python tools/calibrate_cache.py
+Prints the best CAL dict; the winner is frozen into core/cache_model.py.
+"""
+import math
+import random
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.cache_model import CAL
+from repro.core.tuner import tune
+
+TARGETS = {
+    ("SRAM", 3): dict(rl=2.91, wl=1.53, re=0.35, we=0.32, lk=6442, ar=5.53),
+    ("STT", 3): dict(rl=2.98, wl=9.31, re=0.81, we=0.31, lk=748, ar=2.34),
+    ("STT", 7): dict(rl=4.58, wl=10.06, re=0.93, we=0.43, lk=1706, ar=5.12),
+    ("SOT", 3): dict(rl=3.71, wl=1.38, re=0.49, we=0.22, lk=527, ar=1.95),
+    ("SOT", 10): dict(rl=6.69, wl=2.47, re=0.51, we=0.40, lk=1434, ar=5.64),
+}
+
+FIELDS = dict(rl="read_latency_ns", wl="write_latency_ns",
+              re="read_energy_nj", we="write_energy_nj",
+              lk="leakage_mw", ar="area_mm2")
+
+# read/write energies drive the paper's dynamic-energy ratios (Fig 4), so
+# they get extra weight; area anchors the iso-area capacities.
+WEIGHTS = dict(rl=1.2, wl=1.0, re=3.0, we=2.0, lk=1.0, ar=1.5)
+
+TUNABLE = [k for k in CAL if k not in ("wr_sector_bits",)]
+
+
+def loss(cal):
+    total, n = 0.0, 0
+    for (mem, cap), tgt in TARGETS.items():
+        p = tune(mem, cap, cal)
+        for k, field in FIELDS.items():
+            pred = getattr(p, field)
+            if pred <= 0 or tgt[k] <= 0:
+                return float("inf")
+            total += WEIGHTS[k] * abs(math.log(pred / tgt[k]))
+            n += 1
+    return total / n
+
+
+def main():
+    rng = random.Random(0)
+    best = dict(CAL)
+    best_l = loss(best)
+    print(f"start loss {best_l:.4f}")
+    temp = 0.5
+    for it in range(4000):
+        cand = dict(best)
+        nkeys = rng.randint(1, 3)
+        for k in rng.sample(TUNABLE, nkeys):
+            cand[k] = best[k] * math.exp(rng.gauss(0, temp * 0.4))
+        # physical bounds
+        cand["wr_flip_rate"] = min(max(cand["wr_flip_rate"], 0.2), 1.0)
+        cand["sram_cell_um2"] = min(max(cand["sram_cell_um2"], 0.05), 0.12)
+        l = loss(cand)
+        if l < best_l:
+            best, best_l = cand, l
+        if it % 500 == 499:
+            temp *= 0.7
+            print(f"iter {it+1}: loss {best_l:.4f}")
+    print("\nCAL = {")
+    for k, v in best.items():
+        print(f"    {k!r}: {v:.6g},")
+    print("}")
+    print(f"\nfinal loss {best_l:.4f}")
+    for (mem, cap), tgt in TARGETS.items():
+        p = tune(mem, cap, best)
+        row = "  ".join(f"{k}={getattr(p, f):8.2f}/{tgt[k]:8.2f}"
+                        for k, f in FIELDS.items())
+        print(f"{mem:5s}{cap:3d}MB {row}")
+
+
+if __name__ == "__main__":
+    main()

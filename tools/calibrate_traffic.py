@@ -1,0 +1,106 @@
+"""Calibrate the workload traffic model against the paper's §4 claims.
+
+Random-restart coordinate descent over repro.core.profiles.TRAFFIC knobs.
+Claim set (all from the paper text):
+  * iso-capacity DL dynamic energy: STT 2.2x, SOT 1.3x (more than SRAM)
+  * iso-capacity leakage energy: 6.3x / 10x lower (avg)
+  * iso-capacity total energy: 5.3x / 8.6x lower (avg)
+  * iso-capacity EDP(+DRAM): up to 3.8x / 4.7x lower
+  * iso-area EDP(+DRAM): 2x / 2.3x lower (avg); ~1.2x w/o DRAM
+  * Fig 6 (AlexNet train, STT): 2.3x -> 4.6x over batch 4..128
+  * all R/W ratios within Fig 3's [~1.5, 26]
+Run: PYTHONPATH=src python tools/calibrate_traffic.py
+"""
+import math
+import random
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import profiles as pr
+from repro.core.iso import batch_sweep, iso_area, iso_capacity, summarize
+
+
+def get_claims():
+    profs = pr.paper_profiles()
+    dl = [p for p in profs if p.mode != "hpc"]
+    res = iso_capacity(profs)
+    res_dl = [r for r in res if not r.workload.startswith("HPCG")]
+    ia = iso_area(profs)
+    out = {}
+    s = summarize(res_dl, "dynamic")
+    out["dyn_stt"] = (s["STT"]["mean"], 2.2)
+    out["dyn_sot"] = (s["SOT"]["mean"], 1.3)
+    s = summarize(res_dl, "leakage")
+    out["leak_stt"] = (1 / s["STT"]["mean"], 6.3)
+    out["leak_sot"] = (1 / s["SOT"]["mean"], 10.0)
+    s = summarize(res_dl, "total")
+    out["tot_stt"] = (1 / s["STT"]["mean"], 5.3)
+    out["tot_sot"] = (1 / s["SOT"]["mean"], 8.6)
+    s = summarize(res, "edp_with_dram")
+    out["edp_stt"] = (s["STT"]["best_reduction_x"], 3.8)
+    out["edp_sot"] = (s["SOT"]["best_reduction_x"], 4.7)
+    s = summarize(ia, "edp_with_dram")
+    out["ia_edp_stt"] = (s["STT"]["mean_reduction_x"], 2.0)
+    out["ia_edp_sot"] = (s["SOT"]["mean_reduction_x"], 2.3)
+    s = summarize(ia, "edp")
+    out["ia_nodram_stt"] = (s["STT"]["mean_reduction_x"], 1.2)
+    bs = batch_sweep("AlexNet", "training", (4, 128))
+    out["fig6_lo"] = (1 / bs[4].metrics["STT"]["edp_with_dram"], 2.3)
+    out["fig6_hi"] = (1 / bs[128].metrics["STT"]["edp_with_dram"], 4.6)
+    # range penalty on R/W ratios
+    pen = 0.0
+    for p in profs:
+        if p.rw_ratio > 26:
+            pen += (p.rw_ratio / 26 - 1)
+        if p.rw_ratio < 1.5:
+            pen += (1.5 / max(p.rw_ratio, 0.1) - 1)
+    return out, pen
+
+
+def loss():
+    claims, pen = get_claims()
+    total = sum(abs(math.log(p / t)) for p, t in claims.values())
+    return total / len(claims) + 0.5 * pen
+
+
+KNOBS = ["k_im2col", "w_tile", "grad_tile", "fc_w_factor",
+         "dram_frac_i", "dram_frac_t"]
+
+
+def main():
+    rng = random.Random(1)
+    best = dict(pr.TRAFFIC)
+    best_l = loss()
+    print(f"start loss {best_l:.4f}")
+    temp = 0.5
+    for it in range(800):
+        cand = dict(best)
+        for k in rng.sample(KNOBS, rng.randint(1, 2)):
+            cand[k] = best[k] * math.exp(rng.gauss(0, temp * 0.5))
+        cand["fc_w_factor"] = min(max(cand["fc_w_factor"], 0.02), 1.0)
+        cand["k_im2col"] = min(max(cand["k_im2col"], 0.1), 2.0)
+        pr.TRAFFIC.update(cand)
+        l = loss()
+        if l < best_l:
+            best, best_l = cand, l
+        else:
+            pr.TRAFFIC.update(best)
+        if it % 100 == 99:
+            temp *= 0.75
+            print(f"iter {it+1}: loss {best_l:.4f}")
+    pr.TRAFFIC.update(best)
+    print("\nTRAFFIC = {")
+    for k, v in best.items():
+        print(f"    {k!r}: {v:.6g},")
+    print("}")
+    claims, pen = get_claims()
+    print(f"final loss {best_l:.4f}  range-penalty {pen:.3f}")
+    for k, (p, t) in claims.items():
+        print(f"  {k:14s} pred={p:7.2f} target={t:7.2f}")
+    from repro.core.profiles import paper_profiles
+    print("R/W:", {p.label: round(p.rw_ratio, 1) for p in paper_profiles()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Emit the EXPERIMENTS.md roofline table from results/dryrun JSONs.
+
+PYTHONPATH=src python tools/roofline_table.py [tag]
+"""
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def fmt(tag="final", mesh=None):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{tag}.json")):
+        r = json.loads(p.read_text())
+        if mesh and r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        bound = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        mf = r["model_flops_per_device"]
+        frac = mf / 197e12 / bound if bound else 0
+        mfr = r.get("model_flops_ratio") or 0
+        rows.append((
+            r["arch"], r["shape"], r["mesh"],
+            roof["compute_s"] * 1e3, roof["memory_s"] * 1e3,
+            roof["collective_s"] * 1e3, roof["dominant"],
+            mfr, frac,
+            r["memory"].get("peak_bytes_est", 0) / 2**30,
+        ))
+    hdr = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+           "| dominant | MF/HLO | roofline frac | peak GiB |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        out.append(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]:.1f} | {r[4]:.1f} | "
+                   f"{r[5]:.1f} | {r[6]} | {r[7]:.2f} | {r[8]:.3f} | "
+                   f"{r[9]:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else "final"
+    print(fmt(tag))
