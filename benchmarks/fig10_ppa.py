@@ -1,4 +1,8 @@
-"""Fig 10: cache PPA scaling 1-32MB, incl. the published crossovers."""
+"""Fig 10: cache PPA scaling 1-32MB, incl. the published crossovers.
+
+``ppa_scaling`` is one batched sweep over the full (memory x capacity)
+grid since the sweep-engine refactor — no per-point tuning.
+"""
 from __future__ import annotations
 
 from benchmarks.common import run_and_emit

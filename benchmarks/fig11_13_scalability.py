@@ -1,4 +1,8 @@
-"""Figs 11-13: normalized energy / latency / EDP vs capacity (scalability)."""
+"""Figs 11-13: normalized energy / latency / EDP vs capacity (scalability).
+
+All (memory x capacity) configurations come from one batched sweep; the
+per-workload evaluation then runs off those tuned configs.
+"""
 from __future__ import annotations
 
 from benchmarks.common import run_and_emit

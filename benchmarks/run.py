@@ -20,6 +20,7 @@ MODULES = [
     "fig8_9_isoarea",
     "fig10_ppa",
     "fig11_13_scalability",
+    "sweep_engine",
     "kernels_micro",
     "crosslayer_tpu",
 ]

@@ -1,0 +1,77 @@
+"""Sweep-engine speedup: batched tune_all vs the per-point reference.
+
+Times Algorithm-1 tuning of the default (3 memories x 6 capacities) grid
+two ways — one batched jit-compiled sweep (``repro.core.sweep``) vs the
+legacy per-point loop (``tuner.tune_reference``, the seed implementation) —
+verifies the selected configurations are identical, and appends a
+timestamped record to ``BENCH_sweep.json`` at the repo root so the speedup
+is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from datetime import datetime, timezone
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.core.tuner import (CAPACITIES_MB, MEMORIES, tune_all,
+                              tune_reference)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sweep.json"
+
+
+def _key(p):
+    return (p.banks, p.rows, p.access_type)
+
+
+def run():
+    t0 = time.perf_counter()
+    tune_all()                       # first call pays jit compilation
+    cold_s = time.perf_counter() - t0
+
+    times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        tune_all()
+        times.append(time.perf_counter() - t0)
+    engine_s = min(times)
+
+    # warm the per-point path's jit too, so the recorded comparison is
+    # loop-vs-batch rather than cold-compile-vs-warm
+    tune_reference("SRAM", 1)
+    t0 = time.perf_counter()
+    ref = {m: {c: tune_reference(m, c) for c in CAPACITIES_MB}
+           for m in MEMORIES}
+    legacy_s = time.perf_counter() - t0
+
+    eng = tune_all()
+    parity = all(_key(eng[m][c]) == _key(ref[m][c])
+                 for m in MEMORIES for c in CAPACITIES_MB)
+    speedup = legacy_s / engine_s
+
+    record = {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "grid": f"{len(MEMORIES)}x{len(CAPACITIES_MB)}",
+        "tune_all_engine_s": engine_s,
+        "tune_all_engine_cold_s": cold_s,
+        "tune_all_legacy_per_point_s": legacy_s,
+        "speedup": speedup,
+        "selections_identical": parity,
+    }
+    history = []
+    if BENCH_PATH.exists():
+        try:
+            history = json.loads(BENCH_PATH.read_text()).get("history", [])
+        except (json.JSONDecodeError, AttributeError):
+            history = []
+    history.append(record)
+    BENCH_PATH.write_text(json.dumps(
+        {"latest": record, "history": history}, indent=2) + "\n")
+
+    emit("sweep_engine_tune_all", engine_s * 1e6,
+         f"legacy {legacy_s*1e3:.0f}ms -> engine {engine_s*1e3:.1f}ms = "
+         f"{speedup:.0f}x | parity={'ok' if parity else 'MISMATCH'} | "
+         f"-> {BENCH_PATH.name}")
+    if not parity:
+        raise AssertionError("engine selections diverge from reference")

@@ -1,28 +1,30 @@
-"""Table 2: EDAP-tuned cache PPA at iso-capacity / iso-area anchors."""
+"""Table 2: EDAP-tuned cache PPA at iso-capacity / iso-area anchors.
+
+All five anchors come out of a single batched sweep over
+(3 memories x {3, 7, 10} MB); the iso-area capacities come from one
+batched ladder sweep over both NVMs.
+"""
 from __future__ import annotations
 
 from benchmarks.common import run_and_emit
-from repro.core.tuner import iso_area_capacity, tune
+from repro.core.cache_model import PPA_METRICS as FIELDS
+from repro.core.sweep import iso_area_search, sweep
+from repro.core.table2 import TABLE2_ANCHORS
 
-TARGETS = {
-    ("SRAM", 3): (2.91, 1.53, 0.35, 0.32, 6442, 5.53),
-    ("STT", 3): (2.98, 9.31, 0.81, 0.31, 748, 2.34),
-    ("STT", 7): (4.58, 10.06, 0.93, 0.43, 1706, 5.12),
-    ("SOT", 3): (3.71, 1.38, 0.49, 0.22, 527, 1.95),
-    ("SOT", 10): (6.69, 2.47, 0.51, 0.40, 1434, 5.64),
-}
-FIELDS = ("read_latency_ns", "write_latency_ns", "read_energy_nj",
-          "write_energy_nj", "leakage_mw", "area_mm2")
+TARGETS = {key: tuple(row[f] for f in FIELDS)
+           for key, row in TABLE2_ANCHORS.items()}
 
 
 def run():
     def work():
+        caps = tuple(sorted({float(cap) for _, cap in TARGETS}))
+        s = sweep(("SRAM", "STT", "SOT"), caps)
         rows = {}
         for (mem, cap), tgt in TARGETS.items():
-            p = tune(mem, cap)
+            p = s.config(mem, float(cap))
             rows[(mem, cap)] = [getattr(p, f) for f in FIELDS]
-        sram_area = tune("SRAM", 3).area_mm2
-        iso = {m: iso_area_capacity(m, sram_area) for m in ("STT", "SOT")}
+        sram_area = s.config("SRAM", 3.0).area_mm2
+        iso = iso_area_search(("STT", "SOT"), sram_area)
         return rows, iso
 
     def derive(out):

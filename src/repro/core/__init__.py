@@ -1,7 +1,9 @@
 """DeepNVM++ core: cross-layer NVM cache modeling for DL workloads."""
 from repro.core.bitcell import SOT, SRAM, STT, TABLE1, Bitcell
-from repro.core.cache_model import CachePPA, evaluate_config
+from repro.core.cache_model import CachePPA, evaluate_batch, evaluate_config
+from repro.core.sweep import SweepResult, iso_area_search, sweep
 from repro.core.tuner import tune, tune_all
 
 __all__ = ["SOT", "SRAM", "STT", "TABLE1", "Bitcell", "CachePPA",
-           "evaluate_config", "tune", "tune_all"]
+           "SweepResult", "evaluate_batch", "evaluate_config",
+           "iso_area_search", "sweep", "tune", "tune_all"]

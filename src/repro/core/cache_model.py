@@ -14,13 +14,18 @@ Conventions (documented deviations -> DESIGN.md):
     trade-off multiplier triple (NVSim's internal modes are unavailable).
 
 The design space swept per (memory, capacity) is banks x subarray-rows x
-access type; ``repro.core.tuner`` implements the paper's Algorithm 1 over
-this model.
+access type. ``evaluate_batch`` is the array-native core: one elementwise
+JAX computation over a stacked (memory x capacity x banks x rows x access)
+tensor, differentiable in the calibration constants. Everything else in
+this module (``design_grid``, ``evaluate_config``) is a thin per-point view
+over it for compatibility; ``repro.core.sweep`` builds the batched
+design-space engine (Algorithm 1, iso-area search, calibration loss) on
+top, and ``repro.core.tuner`` keeps the paper-shaped public API.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,17 +96,43 @@ class CachePPA:
         return dataclasses.asdict(self)
 
 
-def _evaluate_grid(cell: Bitcell, capacity_mb: float, c: Dict = CAL):
-    """Vectorized PPA over (banks x rows x access types). Returns dict of
-    jnp arrays shaped (len(BANKS), len(ROWS), len(ACCESS_TYPES))."""
-    nbits = capacity_mb * MB * 8.0
-    banks = jnp.asarray(BANKS, jnp.float32)[:, None, None]
-    rows = jnp.asarray(ROWS, jnp.float32)[None, :, None]
-    lat_m = jnp.asarray([_ACC_MULT[a][0] for a in ACCESS_TYPES])[None, None, :]
-    en_m = jnp.asarray([_ACC_MULT[a][1] for a in ACCESS_TYPES])[None, None, :]
-    ar_m = jnp.asarray([_ACC_MULT[a][2] for a in ACCESS_TYPES])[None, None, :]
+PPA_METRICS = ("read_latency_ns", "write_latency_ns", "read_energy_nj",
+               "write_energy_nj", "leakage_mw", "area_mm2")
 
-    cell_um2 = c["sram_cell_um2"] * cell.area_rel_sram
+# bitcell fields entering the array model, stacked over the memory axis
+_CELL_FIELDS = ("area_rel_sram", "sense_latency_ps", "sense_energy_pj",
+                "write_latency_ps", "write_energy_pj", "leak_rel_sram")
+
+
+def cell_arrays(cells: Sequence[Bitcell]) -> Dict[str, jnp.ndarray]:
+    """Stack bitcell parameters into (M,) arrays for ``evaluate_batch``."""
+    return {f: jnp.asarray([getattr(c, f) for c in cells], jnp.float32)
+            for f in _CELL_FIELDS}
+
+
+def evaluate_batch(cells: Dict[str, jnp.ndarray], caps_mb: jnp.ndarray,
+                   c: Dict = CAL) -> Dict[str, jnp.ndarray]:
+    """Array-native PPA model: one elementwise computation over the full
+    (memory x capacity x banks x rows x access-type) design tensor.
+
+    ``cells`` is a ``cell_arrays`` dict of (M,) arrays, ``caps_mb`` a (C,)
+    array of capacities in MB, ``c`` the calibration constants (a pytree —
+    traceable, so the whole tensor is differentiable in the constants).
+    Returns {metric: (M, C, len(BANKS), len(ROWS), len(ACCESS_TYPES))}.
+    """
+    cap = jnp.asarray(caps_mb, jnp.float32)[None, :, None, None, None]
+    cf = {k: v[:, None, None, None, None] for k, v in cells.items()}
+    banks = jnp.asarray(BANKS, jnp.float32)[None, None, :, None, None]
+    rows = jnp.asarray(ROWS, jnp.float32)[None, None, None, :, None]
+    lat_m = jnp.asarray([_ACC_MULT[a][0] for a in ACCESS_TYPES])[None, None,
+                                                                 None, None, :]
+    en_m = jnp.asarray([_ACC_MULT[a][1] for a in ACCESS_TYPES])[None, None,
+                                                                None, None, :]
+    ar_m = jnp.asarray([_ACC_MULT[a][2] for a in ACCESS_TYPES])[None, None,
+                                                                None, None, :]
+
+    nbits = cap * (MB * 8.0)
+    cell_um2 = c["sram_cell_um2"] * cf["area_rel_sram"]
     a_cells = nbits * cell_um2 * 1e-6 * (1.0 + c["layout_overhead"])  # mm^2
     n_cols = nbits / rows
     a_periph = n_cols * c["sa_area_um2"] * 1e-6 / jnp.sqrt(banks) \
@@ -113,29 +144,42 @@ def _evaluate_grid(cell: Bitcell, capacity_mb: float, c: Dict = CAL):
     t_dec = c["dec_ns"] + c["dec_log_ns"] * jnp.log2(rows * banks)
     t_bl = c["bl_ns_per_row"] * rows
     t_rt = c["rt_ns_per_mm"] * dist_mm + c["rt_ns_per_mm2"] * area
-    t_read = (t_dec + t_bl + cell.sense_latency_ps * 1e-3 + t_rt) * lat_m
+    t_read = (t_dec + t_bl + cf["sense_latency_ps"] * 1e-3 + t_rt) * lat_m
     t_write = (t_dec + 0.5 * t_rt + c["wr_drv_ns"]
-               + cell.write_latency_ps * 1e-3) * lat_m
+               + cf["write_latency_ps"] * 1e-3) * lat_m
 
     e_wire = c["e_wire_nj_mm"] * dist_mm
     e_read = (c["e_dec_nj"] + e_wire
-              + line_bits * cell.sense_energy_pj * 1e-3
+              + line_bits * cf["sense_energy_pj"] * 1e-3
               * c["e_sense_mult"]) * en_m
     e_write = (c["e_dec_nj"] + e_wire
                + c["wr_sector_bits"] * c["wr_flip_rate"]
-               * cell.write_energy_pj * 1e-3) * en_m
+               * cf["write_energy_pj"] * 1e-3) * en_m
 
-    leak = (c["p_cell_nw"] * 1e-6 * nbits * cell.leak_rel_sram
+    leak = (c["p_cell_nw"] * 1e-6 * nbits * cf["leak_rel_sram"]
             + c["p_periph_mw_mm2"] * (area - a_cells * ar_m
                                       + 0.08 * a_cells * ar_m))
+    shape = jnp.broadcast_shapes(area.shape, lat_m.shape, en_m.shape)
     return {
-        "read_latency_ns": t_read + 0 * en_m,
-        "write_latency_ns": t_write + 0 * en_m,
-        "read_energy_nj": e_read + 0 * lat_m,
-        "write_energy_nj": e_write + 0 * lat_m,
-        "leakage_mw": leak + 0 * lat_m * en_m,
-        "area_mm2": area + 0 * lat_m,
+        "read_latency_ns": jnp.broadcast_to(t_read, shape),
+        "write_latency_ns": jnp.broadcast_to(t_write, shape),
+        "read_energy_nj": jnp.broadcast_to(e_read, shape),
+        "write_energy_nj": jnp.broadcast_to(e_write, shape),
+        "leakage_mw": jnp.broadcast_to(leak, shape),
+        "area_mm2": jnp.broadcast_to(area, shape),
     }
+
+
+_evaluate_batch_jit = jax.jit(evaluate_batch)
+
+
+def _evaluate_grid(cell: Bitcell, capacity_mb: float, c: Dict = CAL):
+    """Per-point view over ``evaluate_batch``: PPA dict of jnp arrays
+    shaped (len(BANKS), len(ROWS), len(ACCESS_TYPES))."""
+    g = _evaluate_batch_jit(cell_arrays([cell]),
+                            jnp.asarray([capacity_mb], jnp.float32),
+                            {k: float(v) for k, v in c.items()})
+    return {k: v[0, 0] for k, v in g.items()}
 
 
 def evaluate_config(mem: str, capacity_mb: float, banks: int, rows: int,
@@ -144,9 +188,7 @@ def evaluate_config(mem: str, capacity_mb: float, banks: int, rows: int,
     g = _evaluate_grid(cell, capacity_mb, cal)
     bi, ri = BANKS.index(banks), ROWS.index(rows)
     ai = ACCESS_TYPES.index(access_type)
-    vals = {k: float(np.broadcast_to(np.asarray(v), (len(BANKS), len(ROWS),
-                                                     len(ACCESS_TYPES)))
-                     [bi, ri, ai]) for k, v in g.items()}
+    vals = {k: float(v[bi, ri, ai]) for k, v in g.items()}
     return CachePPA(mem=mem, capacity_mb=capacity_mb, banks=banks, rows=rows,
                     access_type=access_type, **vals)
 
@@ -155,9 +197,7 @@ def design_grid(mem: str, capacity_mb: float, cal: Dict = CAL):
     """All CachePPA points of the design space for (mem, capacity)."""
     cell = TABLE1[mem]
     g = _evaluate_grid(cell, capacity_mb, cal)
-    full = {k: np.broadcast_to(np.asarray(v),
-                               (len(BANKS), len(ROWS), len(ACCESS_TYPES)))
-            for k, v in g.items()}
+    full = {k: np.asarray(v) for k, v in g.items()}
     out = []
     for bi, b in enumerate(BANKS):
         for ri, r in enumerate(ROWS):

@@ -19,12 +19,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
+from functools import lru_cache
 from pathlib import Path
 from typing import Dict, List, Optional
 
 from repro.core.cache_model import CachePPA
 from repro.core.constants import LINE_BYTES, TPU_SRAM_TIER_MB
-from repro.core.tuner import tune
+from repro.core.tuner import iso_capacity_configs
 
 # traffic split: fraction of modeled surface bytes that are reads
 READ_FRACTION = 0.60
@@ -49,6 +50,11 @@ class CellVerdict:
         return dataclasses.asdict(self)
 
 
+@lru_cache(maxsize=None)
+def _tier_configs(tier_mb: float) -> Dict[str, CachePPA]:
+    return iso_capacity_configs(tier_mb)
+
+
 def _tier_energy(reads: float, writes: float, step_s: float,
                  ppa: CachePPA, leak_derate: float = 1.0) -> float:
     dyn = reads * ppa.read_energy_nj + writes * ppa.write_energy_nj  # nJ
@@ -63,7 +69,7 @@ def analyze_record(rec: Dict, tier_mb: float = TPU_SRAM_TIER_MB
     reads = byts * READ_FRACTION / LINE_BYTES
     writes = byts * (1 - READ_FRACTION) / LINE_BYTES
     step_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
-    cfgs = {m: tune(m, tier_mb) for m in ("SRAM", "STT", "SOT")}
+    cfgs = _tier_configs(tier_mb)
     e = {m: _tier_energy(reads, writes, step_s, cfgs[m],
                          SRAM_LEAK_DERATE if m == "SRAM" else 1.0)
          for m in cfgs}

@@ -9,7 +9,8 @@ from repro.core.cache_model import CachePPA
 from repro.core.constants import GPU_L2_MB
 from repro.core.dram import dram_scale
 from repro.core.profiles import MemoryProfile, paper_profiles, profile
-from repro.core.tuner import iso_area_capacity, tune
+from repro.core.sweep import iso_area_search
+from repro.core.tuner import iso_capacity_configs, tune
 
 
 @dataclasses.dataclass
@@ -21,16 +22,16 @@ class IsoResult:
 
 def _configs_iso_capacity(capacity_mb: float = GPU_L2_MB
                           ) -> Dict[str, CachePPA]:
-    return {m: tune(m, capacity_mb) for m in ("SRAM", "STT", "SOT")}
+    # one batched sweep over all three memories at this capacity
+    return iso_capacity_configs(capacity_mb)
 
 
 def _configs_iso_area(capacity_mb: float = GPU_L2_MB) -> Dict[str, CachePPA]:
     sram = tune("SRAM", capacity_mb)
-    return {
-        "SRAM": sram,
-        "STT": iso_area_capacity("STT", sram.area_mm2),
-        "SOT": iso_area_capacity("SOT", sram.area_mm2),
-    }
+    # one batched ladder sweep covering both NVMs; raises ValueError when
+    # nothing fits the budget (legacy returned None and crashed downstream)
+    nvm = iso_area_search(("STT", "SOT"), sram.area_mm2)
+    return {"SRAM": sram, **nvm}
 
 
 def iso_capacity(profiles: Optional[List[MemoryProfile]] = None,

@@ -12,13 +12,14 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import energy as en
 from repro.core.cache_model import CachePPA
 from repro.core.profiles import MemoryProfile, paper_profiles
-from repro.core.tuner import CAPACITIES_MB, MEMORIES, tune
+from repro.core.tuner import CAPACITIES_MB, MEMORIES, tune_all
 
 
 def ppa_scaling(capacities: Sequence[float] = CAPACITIES_MB
                 ) -> Dict[str, Dict[float, CachePPA]]:
-    """Fig 10: area / latency / energy vs capacity per memory."""
-    return {m: {c: tune(m, c) for c in capacities} for m in MEMORIES}
+    """Fig 10: area / latency / energy vs capacity per memory — one batched
+    sweep over the full (memory x capacity) grid."""
+    return tune_all(MEMORIES, capacities)
 
 
 def workload_scaling(profiles: Optional[List[MemoryProfile]] = None,

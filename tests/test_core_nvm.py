@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitcell import (SOT, SOT_DEVICE, STT, STT_DEVICE,
@@ -12,23 +13,7 @@ from repro.core.profiles import TRAFFIC, paper_profiles, profile
 from repro.core.tuner import iso_area_capacity, tune, tune_all
 from repro.core.workloads import HPCG, NETWORKS
 
-TABLE2 = {
-    ("SRAM", 3): dict(read_latency_ns=2.91, write_latency_ns=1.53,
-                      read_energy_nj=0.35, write_energy_nj=0.32,
-                      leakage_mw=6442, area_mm2=5.53),
-    ("STT", 3): dict(read_latency_ns=2.98, write_latency_ns=9.31,
-                     read_energy_nj=0.81, write_energy_nj=0.31,
-                     leakage_mw=748, area_mm2=2.34),
-    ("STT", 7): dict(read_latency_ns=4.58, write_latency_ns=10.06,
-                     read_energy_nj=0.93, write_energy_nj=0.43,
-                     leakage_mw=1706, area_mm2=5.12),
-    ("SOT", 3): dict(read_latency_ns=3.71, write_latency_ns=1.38,
-                     read_energy_nj=0.49, write_energy_nj=0.22,
-                     leakage_mw=527, area_mm2=1.95),
-    ("SOT", 10): dict(read_latency_ns=6.69, write_latency_ns=2.47,
-                      read_energy_nj=0.51, write_energy_nj=0.40,
-                      leakage_mw=1434, area_mm2=5.64),
-}
+from repro.core.table2 import TABLE2_ANCHORS as TABLE2
 
 
 # --- bitcell ---------------------------------------------------------------
