@@ -1,0 +1,96 @@
+"""Cache-simulator ladder speedup: batched engine vs the per-point loop.
+
+Times a full-ladder, multi-workload trace-driven sweep two ways — one
+batched Pallas launch (``simulate_ladder``) vs the seed per-point loop
+(``simulate_reference``, one launch per (workload, capacity)) — verifies
+the hit/miss counts are bit-exact, and appends a timestamped record to
+``BENCH_cachesim.json`` at the repo root so the speedup is tracked across
+PRs (the trace-level analogue of ``benchmarks/sweep_engine.py``).
+
+The ladder is the whole-octave rungs (power-of-two set counts, so the
+seed path gets its best-case tiling everywhere) plus the 3 MB GPU-L2
+normalization point spliced in via ``capacity_ladder(include=...)``
+(96 sets at 1:16 — tiled 2 x 48 by ``largest_divisor_tile``).
+"""
+from __future__ import annotations
+
+import time
+from datetime import datetime, timezone
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import append_bench_record, emit
+from repro.core.cachesim import (capacity_lines, simulate_ladder,
+                                 simulate_reference, synthetic_traces)
+from repro.core.constants import GPU_L2_MB, LINE_BYTES, MB
+from repro.core.sweep import capacity_ladder
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_cachesim.json"
+
+# 0.5 .. 64 MB whole octaves plus the 3 MB GPU-L2 normalization point
+LADDER_MB = capacity_ladder(steps_per_octave=1, include=(GPU_L2_MB,))
+SCALE = 16                                            # 1:16 capacity scale
+WAYS = 16
+TRACE_LEN = 2048
+SEEDS = (0, 1)                                        # two workload traces
+FOOTPRINT_MB = 256.0
+
+
+def _per_point(traces):
+    return np.stack([
+        np.stack([np.asarray(simulate_reference(
+            tr, capacity_lines(c, scale=SCALE), ways=WAYS))
+            for c in LADDER_MB])
+        for tr in traces])
+
+
+def run():
+    traces = synthetic_traces(
+        TRACE_LEN, int(FOOTPRINT_MB * MB) // (LINE_BYTES * SCALE),
+        seeds=SEEDS)
+
+    t0 = time.perf_counter()
+    engine = simulate_ladder(traces, LADDER_MB, scale=SCALE, ways=WAYS)
+    cold_s = time.perf_counter() - t0
+
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        engine = simulate_ladder(traces, LADDER_MB, scale=SCALE, ways=WAYS)
+        times.append(time.perf_counter() - t0)
+    engine_s = min(times)
+
+    _per_point(traces)               # warm the per-point jit caches
+    t0 = time.perf_counter()
+    ref = _per_point(traces)
+    legacy_s = time.perf_counter() - t0
+
+    parity = bool(np.array_equal(engine, ref))
+    speedup = legacy_s / engine_s
+
+    record = {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "grid": (f"{len(SEEDS)} traces x {len(LADDER_MB)} capacities x "
+                 f"{TRACE_LEN} accesses (ways={WAYS}, 1:{SCALE})"),
+        "ladder_engine_s": engine_s,
+        "ladder_engine_cold_s": cold_s,
+        "ladder_legacy_per_point_s": legacy_s,
+        "speedup": speedup,
+        "counts_bit_exact": parity,
+    }
+    append_bench_record(BENCH_PATH, record)
+
+    emit("cachesim_ladder", engine_s * 1e6,
+         f"legacy {legacy_s*1e3:.0f}ms -> engine {engine_s*1e3:.1f}ms = "
+         f"{speedup:.0f}x | parity={'ok' if parity else 'MISMATCH'} | "
+         f"-> {BENCH_PATH.name}")
+    if not parity:
+        raise AssertionError("ladder engine counts diverge from reference")
+    if speedup < 5.0:
+        raise AssertionError(
+            f"ladder engine speedup {speedup:.1f}x below the 5x floor")
+
+
+if __name__ == "__main__":
+    run()

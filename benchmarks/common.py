@@ -1,10 +1,25 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, CSV row emission, BENCH records."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Callable, List, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+
+
+def append_bench_record(path: Path, record: dict) -> None:
+    """Append ``record`` to a ``BENCH_*.json`` {latest, history} file."""
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text()).get("history", [])
+        except (json.JSONDecodeError, AttributeError):
+            history = []
+    history.append(record)
+    path.write_text(json.dumps(
+        {"latest": record, "history": history}, indent=2) + "\n")
 
 
 def timed(name: str, fn: Callable, *, repeats: int = 3):

@@ -21,6 +21,7 @@ MODULES = [
     "fig10_ppa",
     "fig11_13_scalability",
     "sweep_engine",
+    "cachesim_ladder",
     "kernels_micro",
     "crosslayer_tpu",
 ]

@@ -9,12 +9,11 @@ is tracked across PRs.
 """
 from __future__ import annotations
 
-import json
 import time
 from datetime import datetime, timezone
 from pathlib import Path
 
-from benchmarks.common import emit
+from benchmarks.common import append_bench_record, emit
 from repro.core.tuner import (CAPACITIES_MB, MEMORIES, tune_all,
                               tune_reference)
 
@@ -59,15 +58,7 @@ def run():
         "speedup": speedup,
         "selections_identical": parity,
     }
-    history = []
-    if BENCH_PATH.exists():
-        try:
-            history = json.loads(BENCH_PATH.read_text()).get("history", [])
-        except (json.JSONDecodeError, AttributeError):
-            history = []
-    history.append(record)
-    BENCH_PATH.write_text(json.dumps(
-        {"latest": record, "history": history}, indent=2) + "\n")
+    append_bench_record(BENCH_PATH, record)
 
     emit("sweep_engine_tune_all", engine_s * 1e6,
          f"legacy {legacy_s*1e3:.0f}ms -> engine {engine_s*1e3:.1f}ms = "

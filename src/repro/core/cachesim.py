@@ -2,17 +2,36 @@
 
 Generates synthetic L2 access traces with power-law reuse distances (the
 empirically observed GPU locality shape) and runs them through the
-set-associative LRU simulator (Pallas kernel repro.kernels.cache_sim /
-jnp oracle) at several capacities, producing the DRAM-access-reduction
-curve that cross-validates the analytical miss model (core/dram.py).
+set-associative LRU simulator at several capacities, producing the
+DRAM-access-reduction curve that cross-validates the analytical miss
+model (core/dram.py).
+
+Two simulation paths (DESIGN.md §3):
+
+- ``simulate_ladder`` — the batched engine: one Pallas launch
+  (repro.kernels.cache_sim.cache_sim_ladder) evaluates every
+  (workload trace x capacity rung) pair, returning a (W, L, 2)
+  [hits, misses] tensor. The default rung sequence is the same
+  half-octave ladder the iso-area search sweeps
+  (``repro.core.sweep.capacity_ladder``).
+- ``simulate_reference`` — the seed per-point path (one kernel launch
+  per capacity), retained as the bit-exact parity baseline; the engine
+  must reproduce its counts exactly (tests/test_cachesim.py).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.constants import LINE_BYTES, MB
+from repro.core.constants import GPU_L2_MB, LINE_BYTES, MB
+from repro.core.dram import reduction_pct_from_misses
+from repro.core.sweep import capacity_ladder
+
+#: Documented analytic-vs-trace validation tolerance: the simulated Fig-7
+#: DRAM-access reduction must sit within this many percentage points of
+#: the power-law model's prediction on zipf traffic (DESIGN.md §3).
+ANALYTIC_TOL_PCT = 6.0
 
 
 def synthetic_trace(n: int, footprint_lines: int, *, theta: float = 1.186,
@@ -31,20 +50,56 @@ def synthetic_trace(n: int, footprint_lines: int, *, theta: float = 1.186,
     return ((ranks * 2654435761) % footprint_lines).astype(np.int64)
 
 
-def simulate_capacity_lines(trace: np.ndarray, capacity_lines: int, *,
-                            ways: int = 16, use_kernel: bool = True,
-                            sets_tile: int = 64) -> Tuple[int, int]:
-    """(hits, misses) of the trace against an LRU cache of given size."""
-    num_sets = max(1, capacity_lines // ways)
+def synthetic_traces(n: int, footprint_lines: int, *,
+                     seeds: Sequence[int] = (0,),
+                     theta: float = 1.186) -> np.ndarray:
+    """Stack of workload traces, one per seed: (len(seeds), n)."""
+    return np.stack([synthetic_trace(n, footprint_lines, theta=theta,
+                                     seed=s) for s in seeds])
+
+
+def capacity_lines(capacity_mb: float, *, scale: int = 1) -> int:
+    """Cache capacity in lines at 1:``scale`` (power-law traffic is
+    scale-free, so miss *ratios* are preserved under scaling)."""
+    return int(capacity_mb * MB) // (LINE_BYTES * scale)
+
+
+def largest_divisor_tile(num_sets: int, sets_tile: int) -> int:
+    """Largest set-tile <= ``sets_tile`` that divides ``num_sets``.
+
+    The per-point kernel requires ``num_sets % tile == 0``; the seed's
+    halving loop (``while num_sets % tile: tile //= 2``) degenerated to
+    tile=1 for any odd set count.
+    """
+    for tile in range(min(int(sets_tile), int(num_sets)), 0, -1):
+        if num_sets % tile == 0:
+            return tile
+    return 1
+
+
+def _ladder_sets(capacities_mb: Sequence[float], *, scale: int,
+                 ways: int) -> Tuple[int, ...]:
+    return tuple(max(1, capacity_lines(c, scale=scale) // ways)
+                 for c in capacities_mb)
+
+
+def simulate_reference(trace: np.ndarray, cap_lines: int, *,
+                       ways: int = 16, use_kernel: bool = True,
+                       sets_tile: int = 64) -> Tuple[int, int]:
+    """(hits, misses) of one trace against one LRU cache size.
+
+    Seed per-point path: set ids / tags precomputed on the host, one
+    kernel launch per capacity. Retained as the parity baseline for
+    ``simulate_ladder`` (DESIGN.md §3).
+    """
+    num_sets = max(1, cap_lines // ways)
     set_ids = (trace % num_sets).astype(np.int32)
     tags = (trace // num_sets).astype(np.int32)
     if use_kernel:
         import jax.numpy as jnp
 
         from repro.kernels.ops import cache_sim
-        tile = min(sets_tile, num_sets)
-        while num_sets % tile:
-            tile //= 2
+        tile = largest_divisor_tile(num_sets, sets_tile)
         h, m = cache_sim(jnp.asarray(set_ids), jnp.asarray(tags),
                          num_sets=num_sets, ways=ways, sets_tile=tile)
         return int(h), int(m)
@@ -52,34 +107,92 @@ def simulate_capacity_lines(trace: np.ndarray, capacity_lines: int, *,
     return cache_sim_python(set_ids, tags, num_sets=num_sets, ways=ways)
 
 
+# seed-era name, kept for callers of the per-point API
+simulate_capacity_lines = simulate_reference
+
+
 def simulate_capacity(trace: np.ndarray, capacity_mb: float, *,
                       scale: int = 1, ways: int = 16,
                       use_kernel: bool = True,
                       sets_tile: int = 64) -> Tuple[int, int]:
-    lines = int(capacity_mb * MB) // (LINE_BYTES * scale)
-    return simulate_capacity_lines(trace, lines, ways=ways,
-                                   use_kernel=use_kernel,
-                                   sets_tile=sets_tile)
+    return simulate_reference(trace, capacity_lines(capacity_mb, scale=scale),
+                              ways=ways, use_kernel=use_kernel,
+                              sets_tile=sets_tile)
+
+
+def simulate_ladder(traces: np.ndarray,
+                    capacities_mb: Optional[Sequence[float]] = None, *,
+                    scale: int = 1, ways: int = 16, sets_tile: int = 2048,
+                    use_kernel: bool = True,
+                    interpret: Optional[bool] = None) -> np.ndarray:
+    """Batched trace-driven sweep: (workloads x capacity ladder) in one call.
+
+    ``traces`` is (W, T) line ids (a single (T,) trace is promoted);
+    ``capacities_mb`` defaults to the iso-area search ladder
+    (``sweep.capacity_ladder()``). Returns an (W, L, 2) int64 tensor of
+    [hits, misses] counts, bit-exact with ``simulate_reference`` per point.
+    """
+    caps = tuple(capacities_mb if capacities_mb is not None
+                 else capacity_ladder())
+    traces = np.atleast_2d(np.asarray(traces))
+    if traces.size and (traces.min() < 0 or traces.max() >= 2 ** 31):
+        # the kernel runs in int32; a wrapped-negative id would make
+        # tag == -1 collide with the EMPTY sentinel and fake cold hits
+        raise ValueError(
+            "trace line ids must fit int32 (0 <= id < 2**31); got range "
+            f"[{traces.min()}, {traces.max()}]")
+    ladder = _ladder_sets(caps, scale=scale, ways=ways)
+    if use_kernel:
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import cache_sim_ladder
+        counts = cache_sim_ladder(jnp.asarray(traces, jnp.int32),
+                                  num_sets=ladder, ways=ways,
+                                  sets_tile=sets_tile, interpret=interpret)
+        return np.asarray(counts, np.int64)
+    from repro.kernels.ref import cache_sim_ladder_numpy
+    return cache_sim_ladder_numpy(traces, ladder, ways=ways)
 
 
 def dram_reduction_curve(capacities_mb: Sequence[float] = (3, 6, 12, 24),
                          *, trace_len: int = 400_000, scale: int = 32,
                          footprint_mb: float = 256.0, ways: int = 16,
-                         use_kernel: bool = False,
+                         use_kernel: bool = True,
                          seed: int = 0) -> Dict[float, float]:
-    """Simulated Fig-7 analogue: % DRAM (miss) reduction vs the 3MB base.
+    """Simulated Fig-7 analogue: % DRAM (miss) reduction vs the first
+    capacity, from one whole-ladder batch.
 
     Runs at 1:``scale`` capacity scale (power-law traffic is scale-free, so
     reduction percentages are preserved) to keep trace lengths tractable.
     """
     trace = synthetic_trace(
         trace_len, int(footprint_mb * MB) // (LINE_BYTES * scale), seed=seed)
-    base = None
-    out: Dict[float, float] = {}
-    for c in capacities_mb:
-        _, miss = simulate_capacity(trace, c, scale=scale, ways=ways,
-                                    use_kernel=use_kernel)
-        if base is None:
-            base = miss
-        out[c] = 100.0 * (1.0 - miss / base)
-    return out
+    counts = simulate_ladder(trace, capacities_mb, scale=scale, ways=ways,
+                             use_kernel=use_kernel)
+    miss = counts[0, :, 1].astype(float)
+    return {c: reduction_pct_from_misses(m, miss[0])
+            for c, m in zip(capacities_mb, miss)}
+
+
+def trace_dram_scale(capacities_mb: Sequence[float],
+                     base_mb: float = GPU_L2_MB, *,
+                     trace_len: int = 120_000, scale: int = 32,
+                     footprint_mb: float = 256.0, ways: int = 16,
+                     seed: int = 0,
+                     use_kernel: bool = True) -> Dict[float, float]:
+    """Trace-driven DRAM-transaction multipliers vs ``base_mb``.
+
+    The simulator-backed drop-in for ``core.dram.dram_scale``: one batched
+    ladder run over {base} | {capacities} yields miss(C) / miss(base) for
+    every requested capacity — this is what ``core.iso.iso_area`` consumes
+    in ``dram_model="trace"`` mode.
+    """
+    caps = (float(base_mb),) + tuple(float(c) for c in capacities_mb
+                                     if float(c) != float(base_mb))
+    trace = synthetic_trace(
+        trace_len, int(footprint_mb * MB) // (LINE_BYTES * scale), seed=seed)
+    counts = simulate_ladder(trace, caps, scale=scale, ways=ways,
+                             use_kernel=use_kernel)
+    miss = counts[0, :, 1].astype(float)
+    scales = {c: m / miss[0] for c, m in zip(caps, miss)}
+    return {float(c): scales[float(c)] for c in capacities_mb}

@@ -27,6 +27,13 @@ def dram_scale(capacity_mb: float, base_mb: float = GPU_L2_MB,
     return (capacity_mb / base_mb) ** (-alpha)
 
 
+def reduction_pct_from_misses(misses: float, base_misses: float) -> float:
+    """% DRAM-access reduction given simulated miss counts — the same
+    formula the analytic curve uses, so the trace-driven validation
+    (core/cachesim.py) and this model are directly comparable."""
+    return 100.0 * (1.0 - misses / base_misses)
+
+
 def dram_reduction_pct(capacity_mb: float, base_mb: float = GPU_L2_MB,
                        alpha: float = MISS_ALPHA) -> float:
     """Fig 7: percentage reduction in total DRAM accesses."""

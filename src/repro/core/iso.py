@@ -49,16 +49,38 @@ def iso_capacity(profiles: Optional[List[MemoryProfile]] = None,
 
 
 def iso_area(profiles: Optional[List[MemoryProfile]] = None,
-             capacity_mb: float = GPU_L2_MB) -> List[IsoResult]:
-    """Figs 8-9: same area -> larger NVM caches -> fewer DRAM accesses."""
+             capacity_mb: float = GPU_L2_MB,
+             dram_model: str = "analytic",
+             trace_kwargs: Optional[Dict] = None) -> List[IsoResult]:
+    """Figs 8-9: same area -> larger NVM caches -> fewer DRAM accesses.
+
+    ``dram_model`` picks how the DRAM-transaction multiplier at the
+    iso-area capacities is obtained: ``"analytic"`` uses the power-law
+    miss model (core/dram.py); ``"trace"`` runs the batched LRU ladder
+    simulator (core/cachesim.py, one launch covering the base capacity
+    and both NVM capacities), with ``trace_kwargs`` forwarded to
+    ``trace_dram_scale``.
+    """
+    if dram_model not in ("analytic", "trace"):
+        raise ValueError(f"dram_model must be 'analytic' or 'trace', "
+                         f"got {dram_model!r}")
     profiles = profiles or paper_profiles()
     cfgs = _configs_iso_area(capacity_mb)
+    if dram_model == "trace":
+        from repro.core.cachesim import trace_dram_scale
+        scales = trace_dram_scale(
+            [cfgs[m].capacity_mb for m in ("STT", "SOT")],
+            base_mb=capacity_mb, **(trace_kwargs or {}))
+    else:
+        scales = {cfgs[m].capacity_mb: dram_scale(cfgs[m].capacity_mb,
+                                                  capacity_mb)
+                  for m in ("STT", "SOT")}
     out = []
     for p in profiles:
         base = en.evaluate(p, cfgs["SRAM"])
         metrics = {}
         for m in ("STT", "SOT"):
-            scale = dram_scale(cfgs[m].capacity_mb, capacity_mb)
+            scale = scales[cfgs[m].capacity_mb]
             rep = en.evaluate(p, cfgs[m], dram_transactions=p.dram * scale)
             metrics[m] = en.relative(base, rep)
         out.append(IsoResult(p.label, metrics))

@@ -26,6 +26,7 @@ identical to ``tuner.tune_reference``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -164,15 +165,34 @@ def sweep(mems: Sequence[str], capacities_mb: Sequence[float],
 
 
 def capacity_ladder(start_mb: float = 0.5, max_mb: float = 64.0,
-                    steps_per_octave: int = 2) -> Tuple[float, ...]:
+                    steps_per_octave: int = 2,
+                    include: Sequence[float] = ()) -> Tuple[float, ...]:
     """Geometric capacity ladder; the default replicates the legacy
-    half-octave search (0.5 MB .. 64 MB in x sqrt(2) steps)."""
+    half-octave search (0.5 MB .. 64 MB in x sqrt(2) steps).
+
+    ``include`` splices extra capacities into the rung sequence (sorted,
+    deduplicated) — e.g. the 3 MB GPU-L2 baseline, so the trace-driven
+    ladder simulation (``core.cachesim.simulate_ladder``) covers both the
+    iso-area search rungs and the normalization point in one batch.
+    """
     caps = []
-    cap, mult = start_mb, 2.0 ** (1.0 / steps_per_octave)
-    while cap <= max_mb:
+    k = 0
+    while True:
+        # direct exponentiation, not repeated multiplication: accumulated
+        # error made 0.5 * sqrt(2)^14 > 64, silently dropping the top rung
+        # (whole-octave rungs are now exactly round: 2.0 ** (k / steps))
+        cap = start_mb * 2.0 ** (k / steps_per_octave)
+        if cap > max_mb and not math.isclose(cap, max_mb, rel_tol=1e-9):
+            break
         caps.append(cap)
-        cap *= mult
-    return tuple(caps)
+        k += 1
+    for extra in include:
+        # rungs accumulate float error (0.5 * sqrt(2)^k), so exact
+        # membership would duplicate whole-number includes like 2.0
+        if not any(math.isclose(float(extra), c, rel_tol=1e-9)
+                   for c in caps):
+            caps.append(float(extra))
+    return tuple(sorted(caps))
 
 
 def iso_area_search(mems: Sequence[str], area_budget_mm2: float,

@@ -1,16 +1,27 @@
-"""Pallas TPU kernel: trace-driven set-associative LRU cache simulator.
+"""Pallas TPU kernels: trace-driven set-associative LRU cache simulator.
 
 This is the paper's GPGPU-Sim replacement hot loop (DESIGN.md §3): iso-area
 DRAM-access counts need cache-miss simulation at capacities that don't
-exist in hardware. The TPU-native decomposition: SETS are embarrassingly
-parallel (grid over set tiles, tag/LRU-age state lives in VMEM scratch);
-the TRACE is sequential (fori_loop). Each set tile scans the full trace
-and handles only accesses that map to one of its sets via masked
-vectorized updates — O(sets_tile x ways) vector work per access on the
-VPU, no serialized per-way branching.
+exist in hardware. Two kernels share the LRU semantics:
 
-Inputs: set_ids (T,) int32, tags (T,) int32 (precomputed from line
-addresses). Output: per-set-tile [hits, misses] counts.
+``cache_sim`` (per-point, the seed path retained as the parity baseline):
+SETS are embarrassingly parallel (grid over set tiles, tag/LRU-age state
+lives in VMEM scratch); the TRACE is sequential (fori_loop). Each set tile
+scans the full trace and handles only accesses that map to one of its sets
+via masked vectorized updates — O(sets_tile x ways) vector work per access
+on the VPU, no serialized per-way branching.
+
+``cache_sim_ladder`` (batched engine): one launch whose grid spans
+(workload traces x capacity-ladder set tiles). Each grid cell owns one set
+tile of one ladder rung, derives set ids / tags from the raw line trace
+and its rung's set count in-kernel, and touches only the one (1, ways)
+LRU row an access maps to (dynamic-slice read/modify/write) — O(ways)
+work per access instead of O(sets_tile x ways), which is what makes the
+whole-ladder batch beat the per-point loop (BENCH_cachesim.json).
+
+Inputs: per-point takes set_ids/tags (T,) int32 precomputed from line
+addresses; the ladder engine takes raw line traces (W, T) int32 plus the
+static per-rung set counts. Outputs: [hits, misses] counts.
 """
 from __future__ import annotations
 
@@ -94,3 +105,99 @@ def cache_sim(set_ids, tags, *, num_sets: int, ways: int,
     )(set_ids.astype(jnp.int32), tags.astype(jnp.int32))
     total = counts.sum(axis=0)
     return total[0], total[1]
+
+
+def _ladder_kernel(ns_ref, base_ref, trace_ref, out_ref, tags_scr, age_scr,
+                   *, sets_tile: int, ways: int, trace_len: int):
+    ns = ns_ref[0]                               # this tile's rung set count
+    s0 = base_ref[0]                             # first set owned by the tile
+    tags_scr[...] = jnp.full(tags_scr.shape, EMPTY, tags_scr.dtype)
+    age_scr[...] = jnp.zeros_like(age_scr)
+
+    trace = trace_ref[0, :]
+    set_ids = trace % ns
+    tags_in = trace // ns
+    way_iota = jax.lax.broadcasted_iota(jnp.int32, (1, ways), 1)
+
+    def step(t, carry):
+        hits, misses = carry
+        sid = set_ids[t] - s0                    # local set row
+        tag = tags_in[t]
+        in_tile = (sid >= 0) & (sid < sets_tile)
+        row = jnp.where(in_tile, sid, 0)
+        row_tags = tags_scr[pl.ds(row, 1), :]    # (1, ways)
+        row_ages = age_scr[pl.ds(row, 1), :]
+        hit_way = jnp.min(jnp.where(row_tags == tag, way_iota, ways))
+        hit = hit_way < ways
+        victim = jnp.argmax(row_ages)            # LRU way: max age wins
+        way = jnp.where(hit, hit_way, victim)
+        touched = way_iota == way
+        # touched way -> age 0; rest of the row ages by one
+        new_tags = jnp.where(touched, tag, row_tags)
+        new_ages = jnp.where(touched, 0, row_ages + 1)
+        keep = ~in_tile                          # foreign access: no-op write
+        tags_scr[pl.ds(row, 1), :] = jnp.where(keep, row_tags, new_tags)
+        age_scr[pl.ds(row, 1), :] = jnp.where(keep, row_ages, new_ages)
+        return (hits + jnp.where(in_tile & hit, 1, 0),
+                misses + jnp.where(in_tile & ~hit, 1, 0))
+
+    h, m = jax.lax.fori_loop(0, trace_len, step,
+                             (jnp.int32(0), jnp.int32(0)))
+    out_ref[0, 0, 0] = h
+    out_ref[0, 0, 1] = m
+
+
+def ladder_tiles(num_sets_ladder, sets_tile: int):
+    """Static (tile set-count, tile base, rung id) triples covering a ladder.
+
+    One entry per grid cell of ``cache_sim_ladder``: rung ``l`` with ``ns``
+    sets contributes ``ceil(ns / tile)`` tiles (no divisibility requirement —
+    the kernel masks accesses outside ``[base, base + tile)``).
+    """
+    ladder = tuple(int(n) for n in num_sets_ladder)
+    if not ladder or min(ladder) < 1:
+        raise ValueError(f"bad set-count ladder {ladder!r}")
+    tile = min(int(sets_tile), max(ladder))
+    ns_of, base_of, rung_of = [], [], []
+    for l, ns in enumerate(ladder):
+        for base in range(0, ns, tile):
+            ns_of.append(ns)
+            base_of.append(base)
+            rung_of.append(l)
+    return tile, tuple(ns_of), tuple(base_of), tuple(rung_of)
+
+
+def cache_sim_ladder(traces, num_sets_ladder, *, ways: int,
+                     sets_tile: int = 2048, interpret: bool = False):
+    """Simulate every (trace, ladder rung) pair in one Pallas launch.
+
+    ``traces`` is (W, T) int32 line ids; ``num_sets_ladder`` a static tuple
+    of per-rung set counts. Returns (W, L, 2) int32 [hits, misses].
+    """
+    traces = jnp.asarray(traces, jnp.int32)
+    W, T = traces.shape
+    tile, ns_of, base_of, rung_of = ladder_tiles(num_sets_ladder, sets_tile)
+    G = len(ns_of)
+    kernel = functools.partial(_ladder_kernel, sets_tile=tile, ways=ways,
+                               trace_len=T)
+    counts = pl.pallas_call(
+        kernel,
+        grid=(W, G),
+        in_specs=[
+            pl.BlockSpec((1,), lambda w, g: (g,)),
+            pl.BlockSpec((1,), lambda w, g: (g,)),
+            pl.BlockSpec((1, T), lambda w, g: (w, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 2), lambda w, g: (w, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, G, 2), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((tile, ways), jnp.int32),
+            pltpu.VMEM((tile, ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(ns_of, jnp.int32), jnp.asarray(base_of, jnp.int32), traces)
+    # tile -> rung reduction (pure bookkeeping; rung ids are static)
+    seg = jnp.asarray(rung_of, jnp.int32)
+    per_rung = jax.ops.segment_sum(counts.transpose(1, 0, 2), seg,
+                                   num_segments=len(num_sets_ladder))
+    return per_rung.transpose(1, 0, 2)

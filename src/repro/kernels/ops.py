@@ -50,3 +50,14 @@ def cache_sim(set_ids, tags, *, num_sets, ways, sets_tile=128,
               interpret=None):
     return _cs.cache_sim(set_ids, tags, num_sets=num_sets, ways=ways,
                          sets_tile=sets_tile, interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("num_sets", "ways", "sets_tile",
+                                   "interpret"))
+def cache_sim_ladder(traces, *, num_sets, ways, sets_tile=2048,
+                     interpret=None):
+    """Batched ladder engine; ``num_sets`` is a static tuple of rung set
+    counts. Returns (W, L, 2) int32 [hits, misses]."""
+    return _cs.cache_sim_ladder(traces, num_sets, ways=ways,
+                                sets_tile=sets_tile,
+                                interpret=_interpret(interpret))

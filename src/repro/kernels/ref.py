@@ -83,6 +83,42 @@ def cache_sim_ref(set_ids, tags, *, num_sets: int, ways: int):
     return h, m
 
 
+def cache_sim_numpy(set_ids, tags, *, num_sets: int, ways: int):
+    """Pure-numpy LRU oracle, shape-for-shape with the kernels' tag/age
+    state (empty ways carry the oldest age, so fills precede evictions)."""
+    import numpy as np
+
+    tag_arr = np.full((num_sets, ways), -1, np.int64)
+    age_arr = np.zeros((num_sets, ways), np.int64)
+    hits = misses = 0
+    for sid, tag in zip(np.asarray(set_ids).tolist(),
+                        np.asarray(tags).tolist()):
+        match = np.nonzero(tag_arr[sid] == tag)[0]
+        if match.size:
+            hits += 1
+            way = int(match[0])
+        else:
+            misses += 1
+            way = int(np.argmax(age_arr[sid]))
+        tag_arr[sid, way] = tag
+        age_arr[sid] += 1
+        age_arr[sid, way] = 0
+    return hits, misses
+
+
+def cache_sim_ladder_numpy(traces, num_sets_ladder, *, ways: int):
+    """Numpy oracle for the batched ladder engine: (W, L, 2) counts."""
+    import numpy as np
+
+    traces = np.atleast_2d(np.asarray(traces))
+    out = np.zeros((traces.shape[0], len(num_sets_ladder), 2), np.int64)
+    for w, trace in enumerate(traces):
+        for l, ns in enumerate(num_sets_ladder):
+            out[w, l] = cache_sim_numpy(trace % ns, trace // ns,
+                                        num_sets=ns, ways=ways)
+    return out
+
+
 def cache_sim_python(set_ids, tags, *, num_sets: int, ways: int):
     """Plain-python dict LRU (second, independent oracle for tests)."""
     import collections

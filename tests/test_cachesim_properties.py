@@ -1,0 +1,68 @@
+"""Hypothesis property tests for the trace-driven cache simulator:
+access conservation, LRU inclusion monotonicity, capacity-ladder hit-rate
+monotonicity, and the documented analytic-vs-trace tolerance."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cachesim import (ANALYTIC_TOL_PCT, dram_reduction_curve,
+                                 simulate_ladder, synthetic_trace)
+from repro.core.dram import dram_reduction_pct
+from repro.kernels import ops, ref
+
+
+def _zipf_trace(n, footprint, seed=0, theta=1.3):
+    rng = np.random.RandomState(seed)
+    return (rng.zipf(theta, n) % footprint).astype(np.int64)
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_kernel_conserves_accesses_and_matches_oracle(seed):
+    n, nsets, ways = 300, 32, 4
+    sid = _zipf_trace(n, 10 * nsets, seed=seed) % nsets
+    tags = _zipf_trace(n, 400, seed=seed + 1)
+    h, m = ops.cache_sim(jnp.asarray(sid), jnp.asarray(tags),
+                         num_sets=nsets, ways=ways, sets_tile=8)
+    assert int(h) + int(m) == n
+    assert (int(h), int(m)) == ref.cache_sim_numpy(sid, tags,
+                                                   num_sets=nsets, ways=ways)
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_more_ways_never_more_misses(seed):
+    """LRU stack inclusion: same set mapping, more ways => subset misses."""
+    nsets = 16
+    trace = _zipf_trace(400, 2048, seed=seed)
+    misses = [ref.cache_sim_numpy(trace % nsets, trace // nsets,
+                                  num_sets=nsets, ways=w)[1]
+              for w in (1, 2, 4, 8)]
+    assert sorted(misses, reverse=True) == misses
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=8, deadline=None)
+def test_hit_rate_monotone_up_the_capacity_ladder(seed):
+    trace = synthetic_trace(1500, 8192, seed=seed)
+    counts = simulate_ladder(trace, (0.5, 1, 2, 4, 8, 16), scale=64,
+                             ways=8, use_kernel=False)
+    hits = counts[0, :, 0]
+    assert (counts.sum(axis=2) == 1500).all()
+    # set-count growth is not a strict LRU inclusion, so allow a sliver
+    # of conflict noise (<= 0.5% of the trace) between adjacent rungs
+    slack = 1500 * 0.005
+    assert all(b >= a - slack for a, b in zip(hits, hits[1:]))
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=4, deadline=None)
+def test_simulated_curve_within_documented_analytic_tolerance(seed):
+    sim = dram_reduction_curve((3, 7, 10), trace_len=25_000,
+                               use_kernel=False, seed=seed)
+    for c in (7, 10):
+        assert abs(sim[c] - dram_reduction_pct(c)) < ANALYTIC_TOL_PCT
