@@ -1,19 +1,31 @@
-"""Fig 3: L2 read/write transaction ratios across the workload set."""
+"""Fig 3: L2 read/write transaction ratios across the workload set.
+
+Two cohorts, both off single batched traffic-engine evaluations: the
+paper's 13 profiles (5 DNNs × {I, T} + HPCG) checked against the Fig-3
+[2, 26] band, and the modern-config cohort (``traffic.MODERN_COHORT``,
+transformers/SSM/enc-dec lowered through the ``LayerStack`` adapter) as
+a beyond-paper Fig-3-style row set.
+"""
 from __future__ import annotations
 
 from benchmarks.common import run_and_emit
 from repro.core.profiles import paper_profiles
+from repro.core.traffic import modern_profiles
 
 
 def run():
     def work():
-        return paper_profiles()
+        return paper_profiles(), modern_profiles()
 
-    def derive(profs):
+    def derive(out):
+        profs, modern = out
         ratios = {p.label: round(p.rw_ratio, 1) for p in profs}
         lo, hi = min(ratios.values()), max(ratios.values())
         in_range = 1.5 <= lo and hi <= 26.5
+        mod = {p.label: round(p.rw_ratio, 2) for p in modern}
         return (f"range [{lo},{hi}] (paper: 2..26; in-range={in_range}) | "
-                + " ".join(f"{k}={v}" for k, v in ratios.items()))
+                + " ".join(f"{k}={v}" for k, v in ratios.items())
+                + " | modern: "
+                + " ".join(f"{k}={v}" for k, v in mod.items()))
 
     run_and_emit("fig3_rw_ratios", work, derive)

@@ -22,6 +22,7 @@ MODULES = [
     "fig11_13_scalability",
     "sweep_engine",
     "cachesim_ladder",
+    "traffic_engine",
     "kernels_micro",
     "crosslayer_tpu",
 ]

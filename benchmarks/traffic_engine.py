@@ -1,0 +1,140 @@
+"""Traffic-engine speedup: batched tensor vs the per-point scalar loop.
+
+Times a full (workload × mode × batch-grid) traffic sweep two ways — one
+batched jitted engine call (``repro.core.traffic.compute_traffic``) vs
+the seed per-point scalar path (``profiles.profile_reference``, one
+Python layer-loop per cell) — verifies 1e-6 relative parity on every
+cell, checks that a short Adam run of the differentiable claim loss
+(``make_claim_loss``) stays at-or-below the frozen coordinate-descent
+fit, and appends a timestamped record to ``BENCH_traffic.json`` at the
+repo root (the workload-level analogue of ``benchmarks/sweep_engine.py``
+/ ``benchmarks/cachesim_ladder.py``).
+"""
+from __future__ import annotations
+
+import math
+import time
+from datetime import datetime, timezone
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_bench_record, emit
+from repro.core.profiles import profile_reference
+from repro.core.traffic import (MODES, TRAFFIC, compute_traffic,
+                                make_claim_loss, paper_pack)
+from repro.core.workloads import HPCG, NETWORKS
+from repro.optim import AdamW, constant
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_traffic.json"
+
+BATCHES = tuple(float(2 ** k) for k in range(11))       # 1 .. 1024
+SPEEDUP_FLOOR = 10.0
+ADAM_STEPS = 40
+
+
+def _per_point():
+    """The seed path over the same grid: one scalar call per cell."""
+    out = {}
+    for name in NETWORKS:
+        for mode in MODES:
+            for b in BATCHES:
+                out[(name, mode, b)] = profile_reference(name, mode, int(b))
+    for name in HPCG:
+        out[(name, "hpc", 1.0)] = profile_reference(name, "hpc", 1)
+    return out
+
+
+def _parity(tt, ref, rtol=1e-6):
+    worst = 0.0
+    for (name, mode, b), p in ref.items():
+        q = tt.profile(name, mode, int(b))
+        for f in ("l2_reads", "l2_writes", "dram"):
+            worst = max(worst, abs(getattr(q, f) / getattr(p, f) - 1.0))
+    return worst < rtol, worst
+
+
+def _calibration_check():
+    """Short Adam run from the frozen init; best-seen must not lose."""
+    claim_loss, _ = make_claim_loss()
+    loss_fn = jax.jit(lambda p: claim_loss({k: jnp.exp(v)
+                                            for k, v in p.items()}))
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p: claim_loss({k: jnp.exp(v) for k, v in p.items()})))
+    params = {k: jnp.asarray(math.log(v), jnp.float32)
+              for k, v in TRAFFIC.items()}
+    frozen = float(loss_fn(params))
+    opt = AdamW(lr=constant(0.02), weight_decay=0.0, clip_norm=1.0,
+                master_weights=False)
+    state = opt.init(params)
+    best = frozen
+    for _ in range(ADAM_STEPS):
+        l, g = grad_fn(params)
+        best = min(best, float(l))
+        params, state, _ = opt.update(g, state, params)
+    return frozen, min(best, float(loss_fn(params)))
+
+
+def run():
+    pack = paper_pack()
+    grid = (f"{len(pack.names)} workloads x {len(MODES)} modes x "
+            f"{len(BATCHES)} batches")
+
+    t0 = time.perf_counter()
+    tt = compute_traffic(pack, BATCHES)
+    cold_s = time.perf_counter() - t0
+
+    times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        tt = compute_traffic(pack, BATCHES)
+        times.append(time.perf_counter() - t0)
+    engine_s = min(times)
+
+    t0 = time.perf_counter()
+    ref = _per_point()
+    legacy_s = time.perf_counter() - t0
+
+    parity, worst = _parity(tt, ref)
+    speedup = legacy_s / engine_s
+    frozen_loss, adam_loss = _calibration_check()
+
+    record = {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "grid": grid,
+        "traffic_engine_s": engine_s,
+        "traffic_engine_cold_s": cold_s,
+        "traffic_legacy_per_point_s": legacy_s,
+        "speedup": speedup,
+        "parity_rel_1e6": parity,
+        "worst_rel_err": worst,
+        "claim_loss_frozen": frozen_loss,
+        "claim_loss_adam": adam_loss,
+        "adam_beats_frozen": adam_loss <= frozen_loss,
+    }
+    append_bench_record(BENCH_PATH, record)
+
+    emit("traffic_engine", engine_s * 1e6,
+         f"{grid}: legacy {legacy_s*1e3:.1f}ms -> engine "
+         f"{engine_s*1e3:.2f}ms = {speedup:.0f}x | "
+         f"parity={'ok' if parity else 'MISMATCH'} ({worst:.1e}) | "
+         f"claim loss frozen {frozen_loss:.4f} -> adam {adam_loss:.4f} | "
+         f"-> {BENCH_PATH.name}")
+    if not parity:
+        raise AssertionError(
+            f"traffic engine diverges from the scalar reference "
+            f"(worst rel err {worst:.2e})")
+    if speedup < SPEEDUP_FLOOR:
+        raise AssertionError(
+            f"traffic engine speedup {speedup:.1f}x below the "
+            f"{SPEEDUP_FLOOR:.0f}x floor")
+    if adam_loss > frozen_loss:
+        raise AssertionError(
+            f"Adam claim loss {adam_loss:.4f} worse than frozen "
+            f"{frozen_loss:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -31,10 +31,13 @@ for c in sorted(res):
 results = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 if results.exists() and list(results.glob("*.json")):
     from repro.core.crosslayer import analyze_dryrun_dir
+    cells = []
     for tag in ("final", "baseline"):
-        cells = analyze_dryrun_dir(str(results), tag=tag)
-        if cells:
+        try:
+            cells = analyze_dryrun_dir(str(results), tag=tag)
             break
+        except FileNotFoundError:
+            continue  # no records under this tag; try the next
     print(f"\n=== TPU cross-layer verdicts ({len(cells)} dry-run cells) ===")
     for v in cells[:12]:
         print(f"  {v.arch:24s} {v.shape:12s} {v.mesh:8s} "

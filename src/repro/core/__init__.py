@@ -2,8 +2,13 @@
 from repro.core.bitcell import SOT, SRAM, STT, TABLE1, Bitcell
 from repro.core.cache_model import CachePPA, evaluate_batch, evaluate_config
 from repro.core.sweep import SweepResult, iso_area_search, sweep
+from repro.core.traffic import (LayerStack, MemoryProfile, TrafficTensor,
+                                WorkloadPack, compute_traffic,
+                                modern_profiles, pack_workloads)
 from repro.core.tuner import tune, tune_all
 
 __all__ = ["SOT", "SRAM", "STT", "TABLE1", "Bitcell", "CachePPA",
-           "SweepResult", "evaluate_batch", "evaluate_config",
-           "iso_area_search", "sweep", "tune", "tune_all"]
+           "LayerStack", "MemoryProfile", "SweepResult", "TrafficTensor",
+           "WorkloadPack", "compute_traffic", "evaluate_batch",
+           "evaluate_config", "iso_area_search", "modern_profiles",
+           "pack_workloads", "sweep", "tune", "tune_all"]

@@ -23,6 +23,9 @@ from functools import lru_cache
 from pathlib import Path
 from typing import Dict, List, Optional
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.cache_model import CachePPA
 from repro.core.constants import LINE_BYTES, TPU_SRAM_TIER_MB
 from repro.core.tuner import iso_capacity_configs
@@ -55,46 +58,71 @@ def _tier_configs(tier_mb: float) -> Dict[str, CachePPA]:
     return iso_capacity_configs(tier_mb)
 
 
-def _tier_energy(reads: float, writes: float, step_s: float,
-                 ppa: CachePPA, leak_derate: float = 1.0) -> float:
-    dyn = reads * ppa.read_energy_nj + writes * ppa.write_energy_nj  # nJ
-    leak = leak_derate * ppa.leakage_mw * 1e-3 * step_s * 1e9        # nJ
-    return dyn + leak
+def analyze_records(recs: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB
+                    ) -> List[CellVerdict]:
+    """Batched verdicts: every cell's (reads, writes, step time) is stacked
+    into (N,) arrays and evaluated against all three tier memories in one
+    array-native pass — the cross-layer consumer of the traffic-tensor
+    convention (DESIGN.md §10)."""
+    if not recs:
+        return []
+    cfgs = _tier_configs(tier_mb)
+    roofs = [r["roofline"] for r in recs]
+    byts = jnp.asarray([r["bytes_per_device"] for r in roofs], jnp.float32)
+    reads = byts * READ_FRACTION / LINE_BYTES
+    writes = byts * (1 - READ_FRACTION) / LINE_BYTES
+    comp = jnp.asarray([r["compute_s"] for r in roofs], jnp.float32)
+    mem = jnp.asarray([r["memory_s"] for r in roofs], jnp.float32)
+    coll = jnp.asarray([r["collective_s"] for r in roofs], jnp.float32)
+    step = jnp.maximum(jnp.maximum(comp, mem), coll)
+    e, d = {}, {}
+    for m, ppa in cfgs.items():
+        derate = SRAM_LEAK_DERATE if m == "SRAM" else 1.0
+        dyn = (reads * ppa.read_energy_nj + writes * ppa.write_energy_nj)
+        leak = derate * ppa.leakage_mw * 1e-3 * step * 1e9          # nJ
+        e[m] = dyn + leak
+        # NVM extra access latency only matters on the memory-bound
+        # fraction; step time is roofline-bound, so delay scales with the
+        # tier's read latency when memory dominates, else stays put.
+        mem_scale = ppa.read_latency_ns / cfgs["SRAM"].read_latency_ns
+        d[m] = jnp.maximum(jnp.maximum(comp, mem * mem_scale), coll)
+    e = {m: np.asarray(v) for m, v in e.items()}
+    d = {m: np.asarray(v) for m, v in d.items()}
+    reads, writes, step = (np.asarray(x) for x in (reads, writes, step))
+    return [CellVerdict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        reads=float(reads[i]), writes=float(writes[i]),
+        step_s=float(step[i]),
+        energy_ratio={m: float(e[m][i] / e["SRAM"][i])
+                      for m in ("STT", "SOT")},
+        edp_ratio={m: float((e[m][i] * d[m][i])
+                            / (e["SRAM"][i] * d["SRAM"][i]))
+                   for m in ("STT", "SOT")},
+    ) for i, rec in enumerate(recs)]
 
 
 def analyze_record(rec: Dict, tier_mb: float = TPU_SRAM_TIER_MB
                    ) -> CellVerdict:
-    roof = rec["roofline"]
-    byts = roof["bytes_per_device"]
-    reads = byts * READ_FRACTION / LINE_BYTES
-    writes = byts * (1 - READ_FRACTION) / LINE_BYTES
-    step_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
-    cfgs = _tier_configs(tier_mb)
-    e = {m: _tier_energy(reads, writes, step_s, cfgs[m],
-                         SRAM_LEAK_DERATE if m == "SRAM" else 1.0)
-         for m in cfgs}
-    # NVM extra access latency only matters on the memory-bound fraction;
-    # step time is roofline-bound, so delay scales with the tier's read
-    # latency when memory dominates, else stays put.
-    d = {}
-    for m, ppa in cfgs.items():
-        mem_scale = ppa.read_latency_ns / cfgs["SRAM"].read_latency_ns
-        mem_s = roof["memory_s"] * mem_scale
-        d[m] = max(roof["compute_s"], mem_s, roof["collective_s"])
-    return CellVerdict(
-        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
-        reads=reads, writes=writes, step_s=step_s,
-        energy_ratio={m: e[m] / e["SRAM"] for m in ("STT", "SOT")},
-        edp_ratio={m: (e[m] * d[m]) / (e["SRAM"] * d["SRAM"])
-                   for m in ("STT", "SOT")},
-    )
+    """Single-cell view over the batched ``analyze_records``."""
+    return analyze_records([rec], tier_mb)[0]
 
 
 def analyze_dryrun_dir(results_dir: str, tag: str = "baseline",
                        tier_mb: float = TPU_SRAM_TIER_MB
                        ) -> List[CellVerdict]:
-    out = []
-    for p in sorted(Path(results_dir).glob(f"*__{tag}.json")):
-        rec = json.loads(p.read_text())
-        out.append(analyze_record(rec, tier_mb))
-    return out
+    """Batched verdicts for every ``*__{tag}.json`` record in a dry-run
+    results dir.  Raises ``FileNotFoundError`` naming the dir and tag when
+    the dir is missing or holds no matching records (the legacy path
+    silently returned ``[]``)."""
+    d = Path(results_dir)
+    if not d.is_dir():
+        raise FileNotFoundError(
+            f"dry-run results dir {str(d)!r} does not exist "
+            f"(tag {tag!r}); run launch/dryrun.py first")
+    paths = sorted(d.glob(f"*__{tag}.json"))
+    if not paths:
+        raise FileNotFoundError(
+            f"no '*__{tag}.json' records in {str(d)!r}; "
+            f"run launch/dryrun.py with --tag {tag}")
+    return analyze_records([json.loads(p.read_text()) for p in paths],
+                           tier_mb)

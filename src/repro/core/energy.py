@@ -3,17 +3,25 @@
 Per the paper: "we multiply the number of read and write transactions by
 the corresponding latency and energy values for those operations"; leakage
 energy integrates leakage power over the execution window; DRAM energy and
-latency are added where stated (Figs 5, 6, 9). All functions are JAX-
-vectorizable scalars (plain float math also works).
+latency are added where stated (Figs 5, 6, 9).
+
+Two views of the same math: the scalar ``evaluate``/``relative`` pair
+(one ``MemoryProfile`` against one ``CachePPA``), and the array-native
+``evaluate_arrays``/``relative_arrays`` pair that ``iso``/``scaling``/
+``crosslayer`` and the traffic-engine claim loss (``core.traffic``) run
+over whole traffic tensors — plain ``jnp`` broadcasting, jittable and
+differentiable end-to-end.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import TYPE_CHECKING, Dict, Optional
 
 from repro.core.cache_model import CachePPA
 from repro.core.constants import DRAM_ENERGY_NJ, DRAM_LATENCY_NS
-from repro.core.profiles import MemoryProfile
+
+if TYPE_CHECKING:  # runtime import would cycle through core.traffic
+    from repro.core.profiles import MemoryProfile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,3 +82,47 @@ def relative(base: EnergyReport, other: EnergyReport) -> Dict[str, float]:
         "edp": other.edp / base.edp,
         "edp_with_dram": other.edp_with_dram / base.edp_with_dram,
     }
+
+
+# --- array-native view (whole traffic tensors) ------------------------------
+
+# PPA fields consumed by the energy math, in the order ``ppa_scalars`` emits
+PPA_ENERGY_FIELDS = ("read_energy_nj", "write_energy_nj", "read_latency_ns",
+                     "write_latency_ns", "leakage_mw")
+
+# metric keys shared by ``relative`` and ``relative_arrays``
+RELATIVE_METRICS = ("dynamic", "leakage", "total", "delay", "edp",
+                    "edp_with_dram")
+
+
+def ppa_scalars(ppa: CachePPA) -> Dict[str, float]:
+    """The energy-relevant fields of one tuned config, as plain floats
+    (broadcast against traffic arrays of any shape)."""
+    return {f: float(getattr(ppa, f)) for f in PPA_ENERGY_FIELDS}
+
+
+def evaluate_arrays(reads, writes, dram, ppa: Dict,
+                    leak_scale: float = 1.0) -> Dict:
+    """Array version of ``evaluate``: all §4 quantities for traffic arrays
+    of any (broadcastable) shape against one PPA field dict — the same
+    formulas, element-wise.  ``ppa`` values may themselves be arrays
+    (e.g. a capacity axis) as long as they broadcast against the traffic.
+    ``leak_scale`` derates leakage (crosslayer's SRAM tier)."""
+    dyn = reads * ppa["read_energy_nj"] + writes * ppa["write_energy_nj"]
+    delay = (reads * ppa["read_latency_ns"]
+             + writes * ppa["write_latency_ns"])
+    delay_dram = delay + dram * DRAM_LATENCY_NS
+    leak = leak_scale * ppa["leakage_mw"] * delay_dram * 1e-3
+    dram_e = dram * DRAM_ENERGY_NJ
+    total = dyn + leak
+    return {
+        "dynamic": dyn, "leakage": leak, "total": total,
+        "dram": dram_e, "delay": delay, "delay_dram": delay_dram,
+        "edp": total * delay,
+        "edp_with_dram": (total + dram_e) * delay_dram,
+    }
+
+
+def relative_arrays(base: Dict, other: Dict) -> Dict:
+    """Array version of ``relative`` — element-wise normalized metrics."""
+    return {k: other[k] / base[k] for k in RELATIVE_METRICS}

@@ -1,16 +1,31 @@
-"""Iso-capacity and iso-area analyses (paper §4.1 / §4.2, Figs 4-9)."""
+"""Iso-capacity and iso-area analyses (paper §4.1 / §4.2, Figs 4-9).
+
+Since the traffic-engine refactor every analysis here consumes whole
+traffic tensors: the profile set is stacked into (P,) read/write/DRAM
+arrays and evaluated against each memory's tuned PPA in one array-native
+energy computation (``energy.evaluate_arrays`` — jittable end-to-end with
+the engine, DESIGN.md §10) instead of looping ``energy.evaluate`` per
+(profile, memory) pair.  ``batch_sweep`` computes its whole batch grid
+from a single engine evaluation.  Public APIs are unchanged.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import energy as en
+from repro.core import traffic as tr
 from repro.core.cache_model import CachePPA
 from repro.core.constants import GPU_L2_MB
 from repro.core.dram import dram_scale
-from repro.core.profiles import MemoryProfile, paper_profiles, profile
+from repro.core.profiles import MemoryProfile, paper_profiles
 from repro.core.sweep import iso_area_search
 from repro.core.tuner import iso_capacity_configs, tune
+
+NVM_MEMS = ("STT", "SOT")
 
 
 @dataclasses.dataclass
@@ -30,22 +45,42 @@ def _configs_iso_area(capacity_mb: float = GPU_L2_MB) -> Dict[str, CachePPA]:
     sram = tune("SRAM", capacity_mb)
     # one batched ladder sweep covering both NVMs; raises ValueError when
     # nothing fits the budget (legacy returned None and crashed downstream)
-    nvm = iso_area_search(("STT", "SOT"), sram.area_mm2)
+    nvm = iso_area_search(NVM_MEMS, sram.area_mm2)
     return {"SRAM": sram, **nvm}
+
+
+def _profile_arrays(profiles: Sequence[MemoryProfile]):
+    return (jnp.asarray([p.l2_reads for p in profiles], jnp.float32),
+            jnp.asarray([p.l2_writes for p in profiles], jnp.float32),
+            jnp.asarray([p.dram for p in profiles], jnp.float32))
+
+
+def _relative_results(profiles: Sequence[MemoryProfile],
+                      cfgs: Dict[str, CachePPA],
+                      dram_scales: Optional[Dict[str, float]] = None
+                      ) -> List[IsoResult]:
+    """Whole-tensor evaluation: one array-energy pass per memory over the
+    stacked profile set, unpacked into the legacy per-workload results."""
+    reads, writes, dram = _profile_arrays(profiles)
+    base = en.evaluate_arrays(reads, writes, dram,
+                              en.ppa_scalars(cfgs["SRAM"]))
+    rel = {}
+    for m in NVM_MEMS:
+        d = dram * dram_scales[m] if dram_scales else dram
+        rep = en.evaluate_arrays(reads, writes, d, en.ppa_scalars(cfgs[m]))
+        rel[m] = {k: np.asarray(v)
+                  for k, v in en.relative_arrays(base, rep).items()}
+    return [IsoResult(p.label,
+                      {m: {k: float(rel[m][k][i]) for k in rel[m]}
+                       for m in NVM_MEMS})
+            for i, p in enumerate(profiles)]
 
 
 def iso_capacity(profiles: Optional[List[MemoryProfile]] = None,
                  capacity_mb: float = GPU_L2_MB) -> List[IsoResult]:
     """Figs 4-5: same capacity, NVM vs SRAM, DRAM identical across mems."""
     profiles = profiles or paper_profiles()
-    cfgs = _configs_iso_capacity(capacity_mb)
-    out = []
-    for p in profiles:
-        base = en.evaluate(p, cfgs["SRAM"])
-        metrics = {m: en.relative(base, en.evaluate(p, cfgs[m]))
-                   for m in ("STT", "SOT")}
-        out.append(IsoResult(p.label, metrics))
-    return out
+    return _relative_results(profiles, _configs_iso_capacity(capacity_mb))
 
 
 def iso_area(profiles: Optional[List[MemoryProfile]] = None,
@@ -68,34 +103,25 @@ def iso_area(profiles: Optional[List[MemoryProfile]] = None,
     cfgs = _configs_iso_area(capacity_mb)
     if dram_model == "trace":
         from repro.core.cachesim import trace_dram_scale
-        scales = trace_dram_scale(
-            [cfgs[m].capacity_mb for m in ("STT", "SOT")],
+        by_cap = trace_dram_scale(
+            [cfgs[m].capacity_mb for m in NVM_MEMS],
             base_mb=capacity_mb, **(trace_kwargs or {}))
+        scales = {m: by_cap[cfgs[m].capacity_mb] for m in NVM_MEMS}
     else:
-        scales = {cfgs[m].capacity_mb: dram_scale(cfgs[m].capacity_mb,
-                                                  capacity_mb)
-                  for m in ("STT", "SOT")}
-    out = []
-    for p in profiles:
-        base = en.evaluate(p, cfgs["SRAM"])
-        metrics = {}
-        for m in ("STT", "SOT"):
-            scale = scales[cfgs[m].capacity_mb]
-            rep = en.evaluate(p, cfgs[m], dram_transactions=p.dram * scale)
-            metrics[m] = en.relative(base, rep)
-        out.append(IsoResult(p.label, metrics))
-    return out
+        scales = {m: dram_scale(cfgs[m].capacity_mb, capacity_mb)
+                  for m in NVM_MEMS}
+    return _relative_results(profiles, cfgs, dram_scales=scales)
 
 
 def iso_area_capacities(capacity_mb: float = GPU_L2_MB) -> Dict[str, float]:
     cfgs = _configs_iso_area(capacity_mb)
-    return {m: cfgs[m].capacity_mb for m in ("STT", "SOT")}
+    return {m: cfgs[m].capacity_mb for m in NVM_MEMS}
 
 
 def summarize(results: List[IsoResult], metric: str) -> Dict[str, Dict[str, float]]:
     """avg / best (max reduction = min ratio) per memory for one metric."""
     out = {}
-    for m in ("STT", "SOT"):
+    for m in NVM_MEMS:
         vals = [r.metrics[m][metric] for r in results]
         out[m] = {
             "mean": sum(vals) / len(vals),
@@ -109,13 +135,10 @@ def summarize(results: List[IsoResult], metric: str) -> Dict[str, Dict[str, floa
 
 def batch_sweep(net: str = "AlexNet", mode: str = "training",
                 batches=(4, 8, 16, 32, 64, 128)) -> Dict[int, IsoResult]:
-    """Fig 6: EDP (with DRAM) vs batch size, iso-capacity."""
+    """Fig 6: EDP (with DRAM) vs batch size, iso-capacity — the whole
+    batch grid comes from ONE engine evaluation and one energy pass."""
     cfgs = _configs_iso_capacity()
-    out = {}
-    for b in batches:
-        p = profile(net, mode, b)
-        base = en.evaluate(p, cfgs["SRAM"])
-        out[b] = IsoResult(p.label, {
-            m: en.relative(base, en.evaluate(p, cfgs[m]))
-            for m in ("STT", "SOT")})
-    return out
+    tt = tr.compute_traffic(tr.paper_pack(), batches)
+    profs = [tt.profile(net, mode, b) for b in batches]
+    results = _relative_results(profs, cfgs)
+    return {b: res for b, res in zip(batches, results)}

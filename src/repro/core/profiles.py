@@ -1,8 +1,19 @@
-"""Workload memory-behavior profiles (paper §3.3).
+"""Workload memory-behavior profiles (paper §3.3) — engine views.
 
 The paper obtains L2 read/write transaction counts from nvprof on a GTX
-1080 Ti. Without the GPU, we derive them analytically from the per-layer
-workload descriptors with a small, documented traffic model:
+1080 Ti.  Without the GPU, they are derived analytically from per-layer
+workload descriptors.  Since the traffic-engine refactor the
+*implementation* lives in ``repro.core.traffic``: workloads are packed
+into padded JAX descriptor arrays and the whole (workload × mode ×
+batch-grid) traffic tensor is computed in one jitted, differentiable call
+(DESIGN.md §10).  This module keeps the paper-shaped public API —
+``profile()`` / ``paper_profiles()`` / ``dl_profiles()`` are thin views
+over one engine evaluation, and ``_layer_traffic`` survives as the
+float64 scalar reference the engine is parity-tested against
+(``tests/test_traffic_engine.py``, 1e-6 relative).
+
+Traffic model (knobs in ``traffic.TRAFFIC``, calibrated against the
+paper's §4 claims by ``tools/calibrate_traffic.py``):
 
 inference (batch B), per layer:
     reads  = B * in_bytes * k_im2col / r_L1          (fmap tiles via im2col)
@@ -10,59 +21,32 @@ inference (batch B), per layer:
     writes = B * out_bytes
 
 training adds the backward pass: activations re-read for dW and dX,
-weight-gradient accumulation read-modify-write per GRAD_TILE samples:
-    reads  = 3 * B * act * k / r + W * (2 + B / GRAD_TILE)
-    writes = B * (in + out) + W * (1 + B / (2 * GRAD_TILE))
-
+weight-gradient accumulation read-modify-write per GRAD_TILE samples.
 This reproduces the paper's measured characteristics: per-workload R/W in
-the Fig-3 range [2, 26], DL-average read-energy share ~83% (=> count-
-weighted R/W ~ 4.4 with Table-2 energies), inference R/W decreasing and
-training R/W increasing with batch size (§4.1, Fig 6 discussion).
-DRAM transaction counts come from core/dram.py's miss model.
+the Fig-3 range [2, 26], inference R/W decreasing and training R/W
+increasing with batch size (§4.1, Fig 6).  DRAM transaction counts come
+from the calibrated DRAM:L2 fractions (core/dram.py models their scaling
+with capacity).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Iterable, List
+from functools import lru_cache
+from typing import List
 
 from repro.core.constants import LINE_BYTES
+from repro.core.traffic import (MemoryProfile, TRAFFIC, compute_traffic,
+                                paper_pack)
 from repro.core.workloads import HPCG, NETWORKS, HPCGWorkload, Network
 
-# Traffic-model knobs; calibrated against the paper's §4 claims by
-# tools/calibrate_traffic.py (see DESIGN.md §3 for the claim set).
-TRAFFIC = {
-    # frozen output of tools/calibrate_traffic.py (mean |log err| 0.18 over
-    # the paper's 13 quantitative §4 claims; R/W range penalty 0)
-    "k_im2col": 0.51713,   # net im2col amplification / L1 reuse (k^2/r_L1)
-    "w_tile": 32.6899,     # samples per weight re-stream (inference)
-    "grad_tile": 4.46882,  # samples per weight-grad accumulation RMW
-    "fc_w_factor": 0.324592,  # FC weight streams are unit-stride/coalesced
-    "dram_frac_i": 0.00848827,  # DRAM:L2 transaction ratio, inference
-    "dram_frac_t": 0.00797266,  # DRAM:L2 transaction ratio, training
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class MemoryProfile:
-    """L2/DRAM transaction counts for one (workload, mode, batch)."""
-    name: str
-    mode: str            # "inference" | "training" | "hpc"
-    batch: int
-    l2_reads: float
-    l2_writes: float
-    dram: float          # DRAM transactions (at the 3MB baseline cache)
-
-    @property
-    def rw_ratio(self) -> float:
-        return self.l2_reads / max(self.l2_writes, 1.0)
-
-    @property
-    def label(self) -> str:
-        suffix = {"inference": "I", "training": "T", "hpc": ""}[self.mode]
-        return f"{self.name}-{suffix}" if suffix else self.name
+__all__ = ["MemoryProfile", "TRAFFIC", "profile", "profile_reference",
+           "paper_profiles", "dl_profiles"]
 
 
 def _layer_traffic(net: Network, batch: int, training: bool, t=None):
+    """Scalar float64 reference (the seed implementation) — the engine's
+    parity oracle and the per-point baseline of
+    ``benchmarks/traffic_engine.py``.  Keep in sync with
+    ``traffic._traffic_jit``."""
     t = t or TRAFFIC
     reads = writes = 0.0
     for l in net.layers:
@@ -80,9 +64,23 @@ def _layer_traffic(net: Network, batch: int, training: bool, t=None):
     return reads / LINE_BYTES, writes / LINE_BYTES
 
 
-def profile(net_name: str, mode: str, batch: int, t=None) -> MemoryProfile:
+def _check_hpcg_args(name: str, mode: str, batch: int) -> None:
+    if mode != "hpc":
+        raise ValueError(
+            f"{name} is an HPC workload: mode must be 'hpc', got {mode!r} "
+            f"(HPCG has no inference/training split)")
+    if batch != 1:
+        raise ValueError(
+            f"{name} is an HPC workload: batch must be 1, got {batch} "
+            f"(HPCG traffic is batch-independent)")
+
+
+def profile_reference(net_name: str, mode: str, batch: int,
+                      t=None) -> MemoryProfile:
+    """Per-point scalar path (seed implementation) — parity oracle."""
     t = t or TRAFFIC
     if net_name in HPCG:
+        _check_hpcg_args(net_name, mode, batch)
         w = HPCG[net_name]
         r, wr = w.transactions()
         return MemoryProfile(w.name, "hpc", 1, r, wr,
@@ -94,16 +92,42 @@ def profile(net_name: str, mode: str, batch: int, t=None) -> MemoryProfile:
     return MemoryProfile(net.name, mode, batch, r, w, (r + w) * frac)
 
 
+def profile(net_name: str, mode: str, batch: int, t=None) -> MemoryProfile:
+    """One (workload, mode, batch) profile — a view over one engine cell.
+
+    Raises ``ValueError`` for HPCG names with ``mode != "hpc"`` or
+    ``batch != 1`` (the legacy path silently returned a mislabeled
+    batch-1 hpc profile)."""
+    if net_name in HPCG:
+        _check_hpcg_args(net_name, mode, batch)
+    tt = compute_traffic(paper_pack(), (float(batch),), t)
+    return tt.profile(net_name, mode, batch)
+
+
 def paper_profiles(inference_batch: int = 4,
                    training_batch: int = 64) -> List[MemoryProfile]:
-    """The paper's workload set: 5 DNNs x {I, T} + HPCG-{S,M,L} (§4.1)."""
+    """The paper's workload set: 5 DNNs x {I, T} + HPCG-{S,M,L} (§4.1) —
+    one batched engine evaluation over the whole set."""
+    # the knob values join the cache key so in-place TRAFFIC edits
+    # (calibration experiments) can never serve stale cached profiles
+    return list(_paper_profiles_cached(int(inference_batch),
+                                       int(training_batch),
+                                       tuple(TRAFFIC.values())))
+
+
+@lru_cache(maxsize=8)
+def _paper_profiles_cached(inference_batch: int, training_batch: int,
+                           _knobs):
+    batches = tuple(dict.fromkeys((float(inference_batch),
+                                   float(training_batch))))
+    tt = compute_traffic(paper_pack(), batches)
     out: List[MemoryProfile] = []
     for name in NETWORKS:
-        out.append(profile(name, "inference", inference_batch))
-        out.append(profile(name, "training", training_batch))
+        out.append(tt.profile(name, "inference", inference_batch))
+        out.append(tt.profile(name, "training", training_batch))
     for name in HPCG:
-        out.append(profile(name, "hpc", 1))
-    return out
+        out.append(tt.profile(name, "hpc", 1))
+    return tuple(out)
 
 
 def dl_profiles(inference_batch: int = 4,

@@ -4,10 +4,20 @@ Each memory is EDAP-tuned independently at every capacity (1..32 MB), then
 evaluated on every workload; results are normalized to SRAM at the same
 capacity. DRAM terms are held at the 3MB-baseline counts (iso-capacity
 convention) so the curves isolate cache scalability.
+
+Since the traffic-engine refactor ``workload_scaling`` consumes the whole
+traffic tensor at once: profiles are stacked into (P,) arrays, each
+memory's tuned PPA across the capacity grid into (C, 1) arrays, and one
+broadcasted array-energy pass (``energy.evaluate_arrays``) yields the
+(C, P) relative-metric tensor per memory — no per-(capacity, workload)
+Python loops.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import energy as en
 from repro.core.cache_model import CachePPA
@@ -22,38 +32,46 @@ def ppa_scaling(capacities: Sequence[float] = CAPACITIES_MB
     return tune_all(MEMORIES, capacities)
 
 
+def _ppa_columns(cfgs: Dict[float, CachePPA],
+                 capacities: Sequence[float]) -> Dict[str, jnp.ndarray]:
+    """Stack one memory's tuned PPA over the capacity grid as (C, 1)
+    arrays, broadcastable against (P,) profile arrays."""
+    return {f: jnp.asarray([[getattr(cfgs[c], f)] for c in capacities],
+                           jnp.float32)
+            for f in en.PPA_ENERGY_FIELDS}
+
+
 def workload_scaling(profiles: Optional[List[MemoryProfile]] = None,
                      capacities: Sequence[float] = CAPACITIES_MB,
                      mode_filter: Optional[str] = None):
     """Figs 11-13: normalized energy / latency / EDP vs capacity.
 
-    Returns {capacity: {mem: {metric: {mean, std}}}} across workloads.
+    Returns {capacity: {mem: {metric: {mean, std, min}}}} across workloads.
     """
-    import math
-
     profiles = profiles or paper_profiles()
     if mode_filter:
         profiles = [p for p in profiles if p.mode == mode_filter]
     cfgs = ppa_scaling(capacities)
-    out: Dict[float, Dict[str, Dict[str, Dict[str, float]]]] = {}
-    for c in capacities:
-        sram = cfgs["SRAM"][c]
-        per_mem: Dict[str, Dict[str, Dict[str, float]]] = {}
-        for m in ("STT", "SOT"):
-            ratios = {"total": [], "delay": [], "edp": []}
-            for p in profiles:
-                base = en.evaluate(p, sram)
-                rel = en.relative(base, en.evaluate(p, cfgs[m][c]))
-                ratios["total"].append(rel["total"])
-                ratios["delay"].append(rel["delay"])
-                ratios["edp"].append(rel["edp_with_dram"])
-            per_mem[m] = {
-                k: {
-                    "mean": sum(v) / len(v),
-                    "std": math.sqrt(sum((x - sum(v) / len(v)) ** 2
-                                         for x in v) / len(v)),
-                    "min": min(v),
-                } for k, v in ratios.items()
-            }
-        out[c] = per_mem
+    reads = jnp.asarray([p.l2_reads for p in profiles], jnp.float32)
+    writes = jnp.asarray([p.l2_writes for p in profiles], jnp.float32)
+    dram = jnp.asarray([p.dram for p in profiles], jnp.float32)
+    base = en.evaluate_arrays(reads, writes, dram,
+                              _ppa_columns(cfgs["SRAM"], capacities))
+    metric_map = {"total": "total", "delay": "delay",
+                  "edp": "edp_with_dram"}
+    out: Dict[float, Dict[str, Dict[str, Dict[str, float]]]] = {
+        c: {} for c in capacities}
+    for m in ("STT", "SOT"):
+        rep = en.evaluate_arrays(reads, writes, dram,
+                                 _ppa_columns(cfgs[m], capacities))
+        rel = en.relative_arrays(base, rep)            # each (C, P)
+        for k, src in metric_map.items():
+            v = np.asarray(rel[src])
+            mean, std, vmin = v.mean(1), v.std(1), v.min(1)
+            for ci, c in enumerate(capacities):
+                out[c].setdefault(m, {})[k] = {
+                    "mean": float(mean[ci]),
+                    "std": float(std[ci]),
+                    "min": float(vmin[ci]),
+                }
     return out

@@ -30,6 +30,25 @@ _DTYPE_BYTES = {
     "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
 
+# JAX dtype-name spellings of the HLO shorthands above
+_DTYPE_ALIASES = {"bfloat16": "bf16", "float16": "f16", "float32": "f32",
+                  "float64": "f64", "int8": "s8", "int32": "s32",
+                  "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2"}
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Bytes per element of an HLO or JAX dtype name.
+
+    The single sizing convention for modeled byte surfaces — the HLO
+    walker and the traffic engine's ``LayerStack`` lowering
+    (``core.traffic``) both size tensors through it.
+    """
+    key = _DTYPE_ALIASES.get(dtype, dtype)
+    if key not in _DTYPE_BYTES:
+        raise KeyError(f"unknown dtype {dtype!r}")
+    return _DTYPE_BYTES[key]
+
+
 _COLL_RE = re.compile(
     r"(?P<outshape>[\w\[\],{}\s()]*?)"
     r"\b(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"

@@ -1,0 +1,194 @@
+"""Batched traffic engine vs the scalar per-point reference.
+
+The parity tests are the engine's correctness contract: every (workload,
+mode, batch) cell of the batched tensor must match the seed scalar path
+(``profiles.profile_reference``) to 1e-6 relative, and
+``paper_profiles()`` must keep its exact order/labels.  Regression tests
+pin the new loud-failure behaviors (HPCG mode/batch ValueError,
+``analyze_dryrun_dir`` FileNotFoundError) and thread the modern-config
+cohort through the Fig-3 / iso-capacity pipeline.  None of these use
+hypothesis (see test_traffic_properties.py for the property suite).
+"""
+import math
+
+import pytest
+
+from repro.core import traffic as tr
+from repro.core.iso import batch_sweep, iso_capacity, summarize
+from repro.core.profiles import (TRAFFIC, paper_profiles, profile,
+                                 profile_reference)
+from repro.core.workloads import HPCG, NETWORKS
+
+PARITY_RTOL = 1e-6
+FIELDS = ("l2_reads", "l2_writes", "dram")
+
+
+# --- parity with the scalar reference --------------------------------------
+
+
+@pytest.mark.parametrize("name", list(NETWORKS))
+@pytest.mark.parametrize("mode", tr.MODES)
+def test_profile_parity(name, mode):
+    for batch in (1, 4, 64, 512):
+        eng = profile(name, mode, batch)
+        ref = profile_reference(name, mode, batch)
+        for f in FIELDS:
+            assert getattr(eng, f) == pytest.approx(
+                getattr(ref, f), rel=PARITY_RTOL), (name, mode, batch, f)
+
+
+@pytest.mark.parametrize("name", list(HPCG))
+def test_hpcg_parity(name):
+    eng = profile(name, "hpc", 1)
+    ref = profile_reference(name, "hpc", 1)
+    for f in FIELDS:
+        assert getattr(eng, f) == pytest.approx(getattr(ref, f),
+                                                rel=PARITY_RTOL)
+
+
+def test_paper_profiles_order_and_parity():
+    profs = paper_profiles()
+    assert [p.label for p in profs] == [
+        f"{n}-{s}" for n in NETWORKS for s in ("I", "T")] + list(HPCG)
+    for p in profs:
+        ref = profile_reference(p.name, p.mode, p.batch)
+        for f in FIELDS:
+            assert getattr(p, f) == pytest.approx(getattr(ref, f),
+                                                  rel=PARITY_RTOL)
+
+
+def test_tensor_is_one_batched_evaluation():
+    batches = (1.0, 4.0, 64.0)
+    tt = tr.compute_traffic(tr.paper_pack(), batches)
+    w = len(tt.names)
+    assert tt.reads.shape == tt.writes.shape == tt.dram.shape \
+        == (w, len(tr.MODES), len(batches))
+    # every DL cell matches the per-point path
+    for name in NETWORKS:
+        for mi, mode in enumerate(tr.MODES):
+            for bi, b in enumerate(batches):
+                ref = profile_reference(name, mode, int(b))
+                wi = tt.names.index(name)
+                assert tt.reads[wi, mi, bi] == pytest.approx(
+                    ref.l2_reads, rel=PARITY_RTOL)
+
+
+def test_batch_sweep_matches_per_point():
+    sw = batch_sweep("AlexNet", "training", (4, 32))
+    assert set(sw) == {4, 32}
+    # per-point pipeline: scalar profile -> scalar iso_capacity
+    for b in (4, 32):
+        per_point = iso_capacity([profile_reference("AlexNet", "training",
+                                                    b)])[0]
+        for m in ("STT", "SOT"):
+            for k, v in per_point.metrics[m].items():
+                assert sw[b].metrics[m][k] == pytest.approx(v, rel=1e-5)
+
+
+# --- loud-failure regressions ----------------------------------------------
+
+
+@pytest.mark.parametrize("mode,batch", [("inference", 1), ("training", 64),
+                                        ("hpc", 4)])
+def test_hpcg_invalid_args_raise(mode, batch):
+    with pytest.raises(ValueError, match="HPC workload"):
+        profile("HPCG-S", mode, batch)
+    with pytest.raises(ValueError, match="HPC workload"):
+        profile_reference("HPCG-S", mode, batch)
+
+
+def test_tensor_hpc_guard_matches_profile_guard():
+    """The tensor view enforces the same HPCG guard as profile(), so
+    batch_sweep and other direct consumers can't get mislabeled rows."""
+    tt = tr.compute_traffic(tr.paper_pack(), (4.0,))
+    with pytest.raises(ValueError, match="HPC workload"):
+        tt.profile("HPCG-S", "training", 4)
+    assert tt.profile("HPCG-S", "hpc", 1).rw_ratio > 0
+
+
+def test_analyze_dryrun_dir_missing_raises(tmp_path):
+    from repro.core.crosslayer import analyze_dryrun_dir
+    missing = tmp_path / "nope"
+    with pytest.raises(FileNotFoundError, match="nope"):
+        analyze_dryrun_dir(str(missing))
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError, match="mytag"):
+        analyze_dryrun_dir(str(empty), tag="mytag")
+
+
+# --- Fig-3 band -------------------------------------------------------------
+
+
+def test_paper_rw_ratios_in_fig3_band():
+    for p in paper_profiles():
+        assert 1.5 <= p.rw_ratio <= 26.5, (p.label, p.rw_ratio)
+
+
+# --- modern-config cohort ---------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def modern():
+    return tr.modern_profiles()
+
+
+def test_modern_cohort_rw_rows(modern):
+    assert len(modern) == 2 * len(tr.MODERN_COHORT) >= 6
+    for p in modern:
+        assert p.l2_reads > 0 and p.l2_writes > 0 and p.dram > 0
+        assert math.isfinite(p.rw_ratio)
+    # training adds backward-pass reads: R/W must rise vs inference
+    by_name = {p.label: p for p in modern}
+    for arch in tr.MODERN_COHORT:
+        assert (by_name[f"{arch}-T"].rw_ratio
+                > by_name[f"{arch}-I"].rw_ratio)
+
+
+def test_modern_cohort_iso_capacity_edp(modern):
+    res = iso_capacity(modern)
+    assert [r.workload for r in res] == [p.label for p in modern]
+    s = summarize(res, "edp_with_dram")
+    for m in ("STT", "SOT"):
+        for r in res:
+            v = r.metrics[m]["edp_with_dram"]
+            assert math.isfinite(v) and v > 0
+        # MRAM tiers must still win on EDP for these workloads
+        assert s[m]["mean"] < 1.0
+
+
+def test_layer_stack_lowering_families():
+    from repro.configs import get_config
+    for arch in ("llama3-8b", "mamba2-1.3b", "whisper-tiny"):
+        stack = tr.LayerStack.from_config(get_config(arch), seq_len=128)
+        assert len(stack.layers) > 4
+        assert all(l.in_bytes > 0 and l.out_bytes > 0 for l in stack.layers)
+    # MoE streams only the active experts
+    moe = get_config("granite-moe-3b-a800m")
+    stack = tr.LayerStack.from_config(moe, seq_len=128)
+    experts = [l for l in stack.layers if l.name.endswith(".experts")]
+    assert experts
+    mlp_in = 2 * moe.d_ff if moe.gated_mlp else moe.d_ff
+    full = moe.num_experts * (moe.d_model * mlp_in
+                              + moe.d_ff * moe.d_model) * 2
+    assert experts[0].weight_bytes < full
+
+
+# --- differentiable claim loss ---------------------------------------------
+
+
+def test_claim_loss_differentiable():
+    import jax
+    import jax.numpy as jnp
+
+    loss_fn, claims_fn = tr.make_claim_loss()
+    t = {k: jnp.asarray(v, jnp.float32) for k, v in TRAFFIC.items()}
+    l0 = float(jax.jit(loss_fn)(t))
+    # frozen knobs were fit to ~0.18 mean |log err| over the 13 claims
+    assert 0.05 < l0 < 0.4
+    g = jax.grad(lambda t_: loss_fn(t_))(t)
+    assert all(math.isfinite(float(v)) for v in g.values())
+    assert any(abs(float(v)) > 0 for v in g.values())
+    claims, pen = claims_fn(TRAFFIC)
+    assert len(claims) == len(tr.CLAIM_TARGETS) == 13
+    assert pen == pytest.approx(0.0, abs=1e-6)

@@ -1,0 +1,72 @@
+"""Hypothesis properties of the batched traffic engine (§4.1 / Fig 6).
+
+Invariants: training R/W ratio monotone-increasing and inference R/W
+monotone-decreasing in batch for every paper workload (the Fig-6
+direction claims), scalar-vs-batched parity at 1e-6 relative on random
+cells, positive traffic everywhere, and the pack's float64 reductions
+matching the padded per-layer arrays they summarize.
+"""
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import traffic as tr
+from repro.core.profiles import profile, profile_reference
+from repro.core.workloads import NETWORKS
+
+NET_NAMES = sorted(NETWORKS)
+
+
+@given(name=st.sampled_from(NET_NAMES),
+       b1=st.integers(1, 512), b2=st.integers(1, 512))
+@settings(max_examples=30, deadline=None)
+def test_rw_ratio_monotone_in_batch(name, b1, b2):
+    """Training gets MORE read-dominant with batch, inference LESS."""
+    lo, hi = sorted((b1, b2))
+    tt = tr.compute_traffic(tr.paper_pack(), (float(lo), float(hi)))
+    tr_lo = tt.profile(name, "training", lo).rw_ratio
+    tr_hi = tt.profile(name, "training", hi).rw_ratio
+    inf_lo = tt.profile(name, "inference", lo).rw_ratio
+    inf_hi = tt.profile(name, "inference", hi).rw_ratio
+    assert tr_lo <= tr_hi * (1 + 1e-6)
+    assert inf_lo >= inf_hi * (1 - 1e-6)
+
+
+@given(name=st.sampled_from(NET_NAMES),
+       mode=st.sampled_from(tr.MODES),
+       batch=st.integers(1, 1024))
+@settings(max_examples=40, deadline=None)
+def test_scalar_batched_parity(name, mode, batch):
+    eng = profile(name, mode, batch)
+    ref = profile_reference(name, mode, batch)
+    for f in ("l2_reads", "l2_writes", "dram"):
+        rel = abs(getattr(eng, f) / getattr(ref, f) - 1.0)
+        assert rel < 1e-6, (name, mode, batch, f, rel)
+    assert eng.l2_reads > 0 and eng.l2_writes > 0 and eng.dram > 0
+
+
+def test_paper_workloads_in_fig3_band():
+    from repro.core.profiles import paper_profiles
+    for p in paper_profiles():
+        assert 1.5 <= p.rw_ratio <= 26.5, (p.label, p.rw_ratio)
+
+
+def test_pack_reductions_match_padded_arrays():
+    """The (W,) float64 reductions are exactly the masked layer sums of
+    the padded (W, Lmax) descriptor arrays they were built from."""
+    pack = tr.paper_pack()
+    lay = pack.layers
+    m = lay["mask"]
+    expect = {
+        "a_conv": (lay["in_bytes"] * lay["kk"] * lay["is_conv"] * m).sum(1),
+        "a_fc": (lay["in_bytes"] * lay["is_fc"] * m).sum(1),
+        "s_in": (lay["in_bytes"] * m).sum(1),
+        "s_out": (lay["out_bytes"] * m).sum(1),
+        "w_conv": (lay["weight_bytes"] * lay["is_conv"] * m).sum(1),
+        "w_fc": (lay["weight_bytes"] * lay["is_fc"] * m).sum(1),
+    }
+    for k, v in expect.items():
+        np.testing.assert_allclose(pack.reduced[k], v, rtol=1e-12)
+    # padding is inert: masked-out entries are zero
+    assert np.all(lay["in_bytes"] * (1 - m) == 0)
