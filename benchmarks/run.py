@@ -23,6 +23,7 @@ MODULES = [
     "sweep_engine",
     "cachesim_ladder",
     "traffic_engine",
+    "serve_engine",
     "kernels_micro",
     "crosslayer_tpu",
 ]

@@ -1,4 +1,4 @@
-"""Batched serving demo: continuous batching over a reduced LM.
+"""Batched serving demo: fused continuous batching over a reduced LM.
 
     PYTHONPATH=src python examples/serve_demo.py --arch qwen2-7b
 """
@@ -16,28 +16,32 @@ def main():
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--ticks-per-sync", type=int, default=4)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg, max_seq=args.max_len)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, slots=args.slots, max_len=args.max_len)
+    eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
+                 ticks_per_sync=args.ticks_per_sync, record_traffic=False)
 
     prompts = [[1, 2, 3], [7, 8], [11, 12, 13, 14], [21], [31, 32], [41]]
-    for i, p in enumerate(prompts):
-        eng.submit(Request(uid=i, prompt=p, max_new_tokens=8,
-                           temperature=0.0 if i % 2 == 0 else 0.8))
-    reqs = list(eng._queue)
-    ticks = 0
-    while eng._queue or any(eng.slot_req):
-        n = eng.step()
-        ticks += 1
-        if ticks % 5 == 0:
-            print(f"tick {ticks:3d}: {n} active sequences")
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8,
+                    temperature=0.0 if i % 2 == 0 else 0.8)
+            for i, p in enumerate(prompts)]
     for r in reqs:
-        print(f"req {r.uid}: prompt={r.prompt} -> output={r.output}")
-    print(f"served {len(prompts)} requests on {args.slots} slots "
-          f"in {ticks} ticks (continuous batching)")
+        eng.submit(r)
+    windows = 0
+    while eng._queue or any(s is not None for s in eng.slot_req):
+        n = eng.step()
+        windows += 1
+        print(f"window {windows} (tick {eng.ticks:3d}): "
+              f"{n} active sequences")
+    for r in reqs:
+        print(f"req {r.uid}: prompt={r.prompt} -> output={r.output} "
+              f"(done at tick {r.done_tick})")
+    print(f"served {len(prompts)} requests on {args.slots} slots in "
+          f"{eng.ticks} ticks / {windows} host syncs (continuous batching)")
 
 
 if __name__ == "__main__":

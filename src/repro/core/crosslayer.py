@@ -107,6 +107,38 @@ def analyze_record(rec: Dict, tier_mb: float = TPU_SRAM_TIER_MB
     return analyze_records([rec], tier_mb)[0]
 
 
+_SERVE_ROOF_KEYS = ("bytes_per_device", "compute_s", "memory_s",
+                    "collective_s")
+
+
+def analyze_serve(records: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB
+                  ) -> List[CellVerdict]:
+    """Serve-mode NVM verdicts from engine-measured traffic records.
+
+    ``records`` come from ``repro.serve.Engine.serve_records()``: one
+    record per serve phase whose roofline terms are the compiled engine
+    tick's (decode) or prefill call's measured per-device HBM traffic —
+    the live-traffic analogue of the dry-run records ``analyze_records``
+    was built for.  Decode ticks are the memory-bound regime where
+    DeepNVM++ (arXiv 2012.04559) predicts MRAM last-level tiers pay off
+    most, and Roy et al. (arXiv 2308.02024) show the verdict hinges on
+    measured per-step traffic — which is exactly what these records carry.
+
+    Raises ``ValueError`` naming the offending record when roofline terms
+    are missing (e.g. the engine ran with ``record_traffic=False`` and a
+    record was assembled by hand).
+    """
+    for rec in records:
+        roof = rec.get("roofline") or {}
+        missing = [k for k in _SERVE_ROOF_KEYS if k not in roof]
+        if missing:
+            raise ValueError(
+                f"serve record {rec.get('shape', '?')!r} is missing "
+                f"roofline terms {missing}; run the engine with "
+                "record_traffic=True")
+    return analyze_records(records, tier_mb)
+
+
 def analyze_dryrun_dir(results_dir: str, tag: str = "baseline",
                        tier_mb: float = TPU_SRAM_TIER_MB
                        ) -> List[CellVerdict]:

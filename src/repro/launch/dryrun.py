@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, cells, get_config, list_archs
 from repro.launch import roofline as rf
-from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.mesh import (make_production_mesh, mesh_axis_sizes,
+                               mesh_context)
 from repro.models.api import build_model, input_specs
 from repro.optim import AdamW, warmup_cosine
 from repro.sharding import activation_sharding, default_rules, tree_shardings
@@ -76,7 +77,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     specs = input_specs(cfg, shape)
 
     t0 = time.time()
-    with jax.set_mesh(mesh), activation_sharding(mesh, rules):
+    with mesh_context(mesh), activation_sharding(mesh, rules):
         if shape.kind == "train":
             opt = AdamW(lr=warmup_cosine(3e-4, 100, 10000))
             step_fn = make_train_step(model, opt, microbatches=microbatches,

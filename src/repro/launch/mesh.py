@@ -41,3 +41,15 @@ def make_mesh_for(num_devices: int, *, model_parallelism: int = 16,
 
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available (jax >= 0.5), else the Mesh's
+    own context manager — the launchers' single mesh-scoping entry point so
+    they run on every jax this repo supports."""
+    import jax
+
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

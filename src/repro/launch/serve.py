@@ -1,14 +1,25 @@
-"""Production serving launcher: mesh + sharded params + batched engine.
+"""Production serving launcher: mesh + sharded params + fused engine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+        --no-reduced --ticks-per-sync 16 --temperature 0.7
+
+``--reduced`` defaults on (CPU-runnable smoke config) and — unlike the
+seed's ``action="store_true", default=True``, which could never be turned
+off — is disabled with ``--no-reduced`` for full-size configs.  After the
+run the launcher prints the engine's serve-mode NVM verdicts: SRAM vs
+STT/SOT-MRAM energy/EDP on the measured decode-tick and prefill traffic.
 """
 import argparse
+import time
 
 import jax
 
 from repro.configs import get_config, reduced as reduce_cfg
+from repro.launch.mesh import mesh_context
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import Engine, mixed_requests, run_staggered, \
+    staggered_groups
 from repro.sharding import default_rules, tree_shardings
 from repro.train.elastic import remesh
 
@@ -18,8 +29,18 @@ def main():
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="smoke-sized config (--no-reduced for full size)")
+    ap.add_argument("--ticks-per-sync", type=int, default=8,
+                    help="fused decode ticks per host drain (K)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every 2nd request "
+                         "(0 = all greedy)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verdicts", action=argparse.BooleanOptionalAction,
+                    default=True, help="print serve-mode NVM verdicts")
     args = ap.parse_args()
 
     mesh = remesh(jax.device_count())
@@ -29,17 +50,34 @@ def main():
     model = build_model(cfg, max_seq=args.max_len)
     rules = default_rules(fsdp=False)  # serving: params over model axis only
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = model.init(jax.random.PRNGKey(0))
         p_sh = tree_shardings(model.param_axes(), params, mesh, rules)
         params = jax.tree.map(jax.device_put, params, p_sh)
-        eng = Engine(model, params, slots=args.slots, max_len=args.max_len)
-        for i in range(args.requests):
-            eng.submit(Request(uid=i, prompt=[1 + i, 2 + i],
-                               max_new_tokens=6))
-        eng.run()
-    print(f"served {args.requests} requests on "
+        eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
+                     seed=args.seed, ticks_per_sync=args.ticks_per_sync,
+                     record_traffic=args.verdicts)
+        reqs = mixed_requests(
+            args.requests, seed=args.seed, vocab=cfg.vocab_size,
+            prompt_lens=(2, max(2, args.max_len // 4)),
+            max_new=(2, max(2, args.max_len // 8)),
+            temperature=args.temperature,
+            temperature_every=2 if args.temperature > 0 else 0)
+        t0 = time.time()
+        outputs = run_staggered(eng, staggered_groups(reqs, args.slots))
+        dt = time.time() - t0
+    ntok = sum(len(o) for o in outputs.values())
+    print(f"served {args.requests} requests / {ntok} tokens in "
+          f"{eng.ticks} ticks (K={args.ticks_per_sync}) = "
+          f"{ntok / dt:.0f} tok/s on "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    if args.verdicts:
+        for v in eng.nvm_verdicts():
+            print(f"  {v.shape}: energy vs SRAM "
+                  f"STT {v.energy_ratio['STT']:.3f} / "
+                  f"SOT {v.energy_ratio['SOT']:.3f}   EDP "
+                  f"STT {v.edp_ratio['STT']:.3f} / "
+                  f"SOT {v.edp_ratio['SOT']:.3f}")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from repro.launch.mesh import mesh_context
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.data import DataConfig, Pipeline
 from repro.models import build_model
@@ -53,7 +54,7 @@ def main():
     rules = default_rules(fsdp=cfg.fsdp, multi_pod=(len(mesh.shape) == 3),
                           strategy=args.strategy)
 
-    with jax.set_mesh(mesh), activation_sharding(mesh, rules):
+    with mesh_context(mesh), activation_sharding(mesh, rules):
         state = init_state(model, opt, jax.random.PRNGKey(0))
         st_sh = tree_shardings(state_axes(model, opt), state, mesh, rules)
         state = jax.tree.map(jax.device_put, state, st_sh)

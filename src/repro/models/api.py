@@ -80,10 +80,25 @@ class Model:
 
     def decode_step(self, params: Params, cache: Params, batch:
                     Dict[str, jax.Array], pos, *, attn_impl: str = "chunked"):
+        """One decode step. ``pos`` is a scalar write position for the whole
+        batch, or — for ``supports_batched_serve`` families — a (B,) int32
+        vector of per-row positions (continuous batching: every serve slot
+        decodes at its own depth in one fused step)."""
         logits, new_cache, _ = self.forward(
             params, batch, mode="decode", cache=cache, cache_pos=pos,
             attn_impl=attn_impl)
         return logits, new_cache
+
+    @property
+    def supports_batched_serve(self) -> bool:
+        """Families with the standard stacked-KV cache layout
+        (layers, batch, max_len, kv_heads, head_dim): their decode path
+        accepts per-row position vectors and their prefill caches scatter
+        directly into serve-engine slots. ssm keeps positionless recurrent
+        state, so batched slots cannot be isolated (a step advances every
+        row's state); hybrid/encdec need per-row ring slots /
+        learned-position slices they don't have yet."""
+        return self.cfg.family in ("dense", "moe", "vlm")
 
 
 def build_model(cfg: ModelConfig, max_seq: int = 4096) -> Model:

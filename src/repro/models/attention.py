@@ -211,6 +211,37 @@ def chunked_attention(
                                    logit_cap, kv_block, p_bf16)
 
 
+def decode_attention(q, k, v, *, pos, window=0, logit_cap=0.0) -> jax.Array:
+    """Single-new-token attention with PER-ROW cache positions (serving).
+
+    q: (B, 1, H, hd); k/v: (B, L, K, hd) full cache buffers; pos: (B,) int32
+    — row b attends key indices <= pos[b] (and inside its local window when
+    ``window`` > 0; ``window`` may be a python int or a traced per-layer
+    scalar). Rows are fully independent: the mask never admits entries past
+    a row's own position, so stale KV from freed slots or not-yet-written
+    future positions cannot leak into any live sequence — the invariant the
+    serve engine's slot isolation rests on (DESIGN.md §11).
+    """
+    B, Sq, H, hd = q.shape
+    L, K = k.shape[1], k.shape[2]
+    G = H // K
+    qr = q.reshape(B, K, G, hd).astype(jnp.float32) * hd ** -0.5
+    logits = jnp.einsum("bkgh,btkh->bkgt", qr, k.astype(jnp.float32))
+    logits = softcap(logits, logit_cap)
+    k_idx = jnp.arange(L, dtype=jnp.int32)
+    ok = k_idx[None, :] <= pos[:, None]
+    if isinstance(window, int):
+        if window > 0:
+            ok &= k_idx[None, :] > pos[:, None] - window
+    elif window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        ok &= (w <= 0) | (k_idx[None, :] > pos[:, None] - w)
+    logits = logits + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
 def naive_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
                     q_offset=0, kv_len=None, k_positions=None) -> jax.Array:
     """Reference O(S^2)-memory attention (oracle, tiny smoke configs, and
@@ -260,6 +291,20 @@ def attention_block(
     new_cache = None
     kv_len = None
     q_offset = 0
+    if cache is not None and cache_pos is not None \
+            and jnp.ndim(cache_pos) >= 1:
+        # batched-serve decode: row b writes its k/v at its OWN position
+        # cache_pos[b] (never another row's — the seed engine's shared
+        # scalar position broadcast every write across all slots) and
+        # attends its own prefix via the per-row mask in decode_attention.
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, cp].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, cp].set(v[:, 0].astype(cache["v"].dtype))
+        out = decode_attention(q, ck, cv, pos=cp, window=window,
+                               logit_cap=cfg.attn_softcap)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return y, {"k": ck, "v": cv}
     if cache is not None and cache_pos is not None:
         # decode: write this step's k/v at cache_pos, attend over prefix
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(

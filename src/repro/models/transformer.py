@@ -239,11 +239,20 @@ def decoder_forward(
     vision_embeds: Optional[jax.Array] = None,
     attn_impl: str = "chunked",
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss).
+
+    ``cache_pos`` in decode mode is either a scalar (whole batch at one
+    position — the dry-run/training-eval convention) or a (B,) int32 vector
+    of PER-ROW positions (the serve engine's continuous-batching tick, where
+    every slot sits at a different depth; see attention.decode_attention).
+    """
     B, S = tokens.shape
     x = _embed(cfg, params, tokens, vision_embeds)
     if mode == "decode":
-        positions = jnp.full((1,), cache_pos, jnp.int32)
+        if cache_pos is not None and jnp.ndim(cache_pos) >= 1:
+            positions = jnp.asarray(cache_pos, jnp.int32)[:, None]  # (B, 1)
+        else:
+            positions = jnp.full((1,), cache_pos, jnp.int32)
     else:
         positions = jnp.arange(S, dtype=jnp.int32)
     windows = layer_windows(cfg)
@@ -351,6 +360,10 @@ def _ssm_forward(cfg, params, x, *, mode, cache):
 
 def hybrid_forward(cfg: ModelConfig, params: Params, tokens, *, mode="train",
                    cache=None, cache_pos=None, attn_impl="chunked"):
+    if cache_pos is not None and jnp.ndim(cache_pos) >= 1:
+        raise ValueError(
+            "hybrid ring-buffer decode takes a scalar cache_pos; per-row "
+            "position vectors (batched serve) need a per-row ring slot")
     B, S = tokens.shape
     x = _embed(cfg, params, tokens)
     pat = hybrid_pattern(cfg)
@@ -512,6 +525,10 @@ def encdec_forward(cfg: ModelConfig, params: Params, tokens, *, frames=None,
                    enc_out=None, mode="train", cache=None, cache_pos=None,
                    attn_impl="chunked"):
     """Decoder (+ optional encoder) forward. Returns (logits, cache, aux)."""
+    if cache_pos is not None and jnp.ndim(cache_pos) >= 1:
+        raise ValueError(
+            "encdec decode takes a scalar cache_pos; per-row position "
+            "vectors (batched serve) need per-row learned-position slices")
     if enc_out is None and frames is not None:
         enc_out = encoder_forward(cfg, params, frames, attn_impl,
                                   train=(mode == "train"))

@@ -1,3 +1,7 @@
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import (Engine, EngineReference, Request,
+                                engine_reference)
+from repro.serve.workload import (mixed_requests, run_staggered,
+                                  staggered_groups)
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "EngineReference", "Request", "engine_reference",
+           "mixed_requests", "run_staggered", "staggered_groups"]
