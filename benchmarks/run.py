@@ -24,6 +24,7 @@ MODULES = [
     "cachesim_ladder",
     "traffic_engine",
     "serve_engine",
+    "train_engine",
     "kernels_micro",
     "crosslayer_tpu",
 ]

@@ -1,0 +1,146 @@
+"""Train-engine speedup: fused K-step windows vs the seed per-step loop.
+
+Runs the same token stream (the deterministic counter-hash pipeline)
+through ``make_train_window`` (one jitted, state-donating ``lax.scan``
+over K full train steps, batches hashed on device) and through the seed
+per-step path (``make_train_step`` + host ``Pipeline`` batches, one
+dispatch + metrics block per step — the launcher's ``--no-fused``
+semantics), verifies bitwise loss-trajectory parity, and appends a record
+to ``BENCH_train.json`` at the repo root.  Floors enforced here (and in
+CI): parity must hold and the warm steps/s speedup must be >= 5x.
+
+The config is sized so per-step HOST overhead (batch transfer, dispatch,
+metrics round-trip) dominates — exactly the cost the fused window
+amortizes to one drain per K steps; model compute is identical on both
+paths.  The record also carries the window's train-mode NVM verdicts —
+per-step SRAM vs STT/SOT energy/EDP ratios from the measured traffic
+(core.crosslayer.analyze_train), closing the loop to the paper's
+write-heavy training regime.
+"""
+from __future__ import annotations
+
+import time
+from datetime import datetime, timezone
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_bench_record, emit
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, Pipeline
+from repro.models import build_model
+from repro.optim import AdamW, constant
+from repro.train.trainer import (init_state, make_train_step,
+                                 make_train_window)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_train.json"
+
+ARCH = "llama3-8b"
+SEQ = 8
+BATCH = 2
+STEPS_PER_SYNC = 50          # K: fused steps per host drain
+PARITY_STEPS = 20            # bitwise loss-trajectory check length
+WARM_WINDOWS = 6             # timed fused windows (K steps each)
+ATTN_IMPL = "naive"          # tiny seqs: the flash-scan machinery's
+SPEEDUP_FLOOR = 5.0          # constant overhead would swamp the signal
+
+
+def _tiny():
+    cfg = reduced(get_config(ARCH), dtype="float32", num_layers=1,
+                  d_model=16, d_ff=32, num_heads=1, num_kv_heads=1,
+                  head_dim=16, vocab_size=128)
+    model = build_model(cfg, max_seq=SEQ)
+    opt = AdamW(lr=constant(1e-3))
+    dcfg = DataConfig(cfg.vocab_size, SEQ, BATCH)
+    return model, opt, dcfg
+
+
+def run():
+    model, opt, dcfg = _tiny()
+
+    # ---- parity: K-step loss trajectory, window vs per-step oracle -----
+    step_fn = jax.jit(make_train_step(model, opt, attn_impl=ATTN_IMPL),
+                      donate_argnums=(0,))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    data = Pipeline(dcfg)
+    oracle = []
+    for _ in range(PARITY_STEPS):
+        state, m = step_fn(state, jax.tree.map(jnp.asarray, next(data)))
+        oracle.append(float(m["loss"]))
+    data.close()
+
+    win_p = make_train_window(model, opt, steps_per_sync=PARITY_STEPS,
+                              data_cfg=dcfg, record_traffic=False,
+                              attn_impl=ATTN_IMPL)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    _, wm = win_p(state)
+    fused = np.asarray(wm["loss"]).tolist()
+    parity = fused == oracle
+
+    # ---- warm steps/s: per-step loop (launcher --no-fused semantics) ---
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    data = Pipeline(dcfg)
+    state, m = step_fn(state, jax.tree.map(jnp.asarray, next(data)))
+    jax.block_until_ready(m)                       # warm the jit
+    n_ref = 3 * STEPS_PER_SYNC
+    t0 = time.perf_counter()
+    for _ in range(n_ref):
+        state, m = step_fn(state, jax.tree.map(jnp.asarray, next(data)))
+        jax.block_until_ready(m)                   # metrics block per step
+    legacy_s = (time.perf_counter() - t0) / n_ref
+    data.close()
+
+    # ---- warm steps/s: fused windows -----------------------------------
+    win = make_train_window(model, opt, steps_per_sync=STEPS_PER_SYNC,
+                            data_cfg=dcfg, attn_impl=ATTN_IMPL)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    state, wm = win(state)                         # cold: compile+traffic
+    jax.block_until_ready(wm)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(WARM_WINDOWS):
+        state, wm = win(state)
+        np.asarray(wm["loss"])                     # ONE drain per window
+    engine_s = (time.perf_counter() - t0) / (WARM_WINDOWS * STEPS_PER_SYNC)
+
+    speedup = legacy_s / engine_s
+    verdicts = {
+        v.shape: {"energy_ratio": v.energy_ratio, "edp_ratio": v.edp_ratio}
+        for v in win.nvm_verdicts()}
+
+    record = {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "grid": (f"{ARCH} tiny (1L d16 v128) b{BATCH} s{SEQ}, "
+                 f"K={STEPS_PER_SYNC}, {WARM_WINDOWS} warm windows, "
+                 f"parity over {PARITY_STEPS} steps"),
+        "engine_step_s": engine_s,
+        "engine_cold_s": cold_s,
+        "legacy_per_step_s": legacy_s,
+        "warm_steps_per_s": 1.0 / engine_s,
+        "reference_steps_per_s": 1.0 / legacy_s,
+        "speedup": speedup,
+        "speedup_floor": SPEEDUP_FLOOR,
+        "loss_parity": parity,
+        "nvm_verdicts": verdicts,
+    }
+    append_bench_record(BENCH_PATH, record)
+
+    emit("train_engine", engine_s * 1e6,
+         f"ref {1/legacy_s:.0f} steps/s -> fused {1/engine_s:.0f} steps/s "
+         f"= {speedup:.1f}x | parity={'ok' if parity else 'MISMATCH'} | "
+         f"-> {BENCH_PATH.name}")
+    if not parity:
+        raise AssertionError(
+            "fused window loss trajectory diverges from the per-step "
+            f"oracle: {fused} vs {oracle}")
+    if speedup < SPEEDUP_FLOOR:
+        raise AssertionError(
+            f"train engine speedup {speedup:.1f}x below the "
+            f"{SPEEDUP_FLOOR:.0f}x floor")
+
+
+if __name__ == "__main__":
+    run()

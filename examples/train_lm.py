@@ -1,6 +1,8 @@
 """End-to-end training driver: train a reduced LM for a few hundred steps
-on CPU with the full production stack — data pipeline, AdamW, remat,
-checkpointing with auto-resume, straggler monitor.
+on CPU with the full production stack — fused K-step train windows with
+device-hashed batches (train/trainer.py::make_train_window), AdamW,
+checkpointing with auto-resume, straggler monitor.  Pass --no-fused for
+the seed per-step loop (host pipeline batches, one dispatch per step).
 
     PYTHONPATH=src python examples/train_lm.py --arch llama3-8b --steps 200
 
@@ -19,7 +21,9 @@ from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
 from repro.train.checkpoint import CheckpointManager
 from repro.train.elastic import StragglerMonitor
-from repro.train.trainer import init_state, make_train_step
+from repro.train.trainer import (init_state, make_train_step,
+                                 make_train_window,
+                                 window_boundary_crossed)
 
 
 def main():
@@ -31,6 +35,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True, help="fused K-step train windows")
+    ap.add_argument("--steps-per-sync", type=int, default=20)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,7 +45,7 @@ def main():
         cfg = reduced(cfg, num_layers=4, d_model=128, d_ff=256)
     model = build_model(cfg, max_seq=args.seq)
     opt = AdamW(lr=warmup_cosine(3e-3, 20, args.steps))
-    step_fn = jax.jit(make_train_step(model, opt))
+    dcfg = DataConfig(cfg.vocab_size, args.seq, args.batch)
 
     mgr = CheckpointManager(args.ckpt_dir, keep=2)
     state = init_state(model, opt, jax.random.PRNGKey(0))
@@ -48,25 +55,53 @@ def main():
         start = int(mgr.latest_step())
         print(f"resumed from checkpoint at step {start}")
 
-    data = Pipeline(DataConfig(cfg.vocab_size, args.seq, args.batch),
-                    start_step=start)
     mon = StragglerMonitor(num_hosts=1)
-    t_last = time.time()
-    for i, batch in zip(range(start, args.steps), data):
-        state, metrics = step_fn(state, jax.tree.map(np.asarray, batch))
-        dt = time.time() - t_last
+    last_loss = None
+    if args.fused:
+        K = args.steps_per_sync
+        win = make_train_window(model, opt, steps_per_sync=K,
+                                data_cfg=dcfg)
+        step, t_last = start, time.time()
+        while step < args.steps:
+            state, metrics = win(state)
+            losses = np.asarray(metrics["loss"])   # one drain per window
+            dt = time.time() - t_last
+            t_last = time.time()
+            mon.record(0, dt / K)
+            step += K
+            last_loss = float(losses[-1])
+            print(f"step {step:4d}  loss {last_loss:.4f}  "
+                  f"gnorm {float(np.asarray(metrics['grad_norm'])[-1]):.3f}"
+                  f"  {dt / K * 1e3:.1f}ms/step (fused K={K})")
+            if window_boundary_crossed(step, K, args.ckpt_every) \
+                    or step >= args.steps:
+                mgr.save(step, state)
+        for v in win.nvm_verdicts():
+            print(f"  {v.shape}: energy vs SRAM "
+                  f"STT {v.energy_ratio['STT']:.3f} / "
+                  f"SOT {v.energy_ratio['SOT']:.3f}")
+    else:
+        step_fn = jax.jit(make_train_step(model, opt))
+        data = Pipeline(dcfg, start_step=start)
         t_last = time.time()
-        mon.record(0, dt)
-        if (i + 1) % 20 == 0:
-            print(f"step {i+1:4d}  loss {float(metrics['loss']):.4f}  "
-                  f"gnorm {float(metrics['grad_norm']):.3f}  "
-                  f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f}ms")
-        if (i + 1) % args.ckpt_every == 0:
-            mgr.save(i + 1, state)
+        for i, batch in zip(range(start, args.steps), data):
+            state, metrics = step_fn(state, jax.tree.map(np.asarray, batch))
+            dt = time.time() - t_last
+            t_last = time.time()
+            mon.record(0, dt)
+            last_loss = float(metrics["loss"])
+            if (i + 1) % 20 == 0:
+                print(f"step {i+1:4d}  loss {last_loss:.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f}ms")
+            if (i + 1) % args.ckpt_every == 0:
+                mgr.save(i + 1, state)
+        data.close()
     mgr.wait()
-    data.close()
-    print(f"done; final loss {float(metrics['loss']):.4f}; "
-          f"checkpoints: {mgr.all_steps()}")
+    # a restore at/after --steps runs no steps: report that, don't crash
+    tail = (f"final loss {last_loss:.4f}" if last_loss is not None
+            else f"resumed at {start} >= --steps {args.steps}, nothing run")
+    print(f"done; {tail}; checkpoints: {mgr.all_steps()}")
 
 
 if __name__ == "__main__":

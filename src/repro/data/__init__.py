@@ -1,3 +1,4 @@
-from repro.data.pipeline import DataConfig, Pipeline, batch_for_step
+from repro.data.pipeline import (DataConfig, Pipeline, batch_for_step,
+                                 device_batch_at)
 
-__all__ = ["DataConfig", "Pipeline", "batch_for_step"]
+__all__ = ["DataConfig", "Pipeline", "batch_for_step", "device_batch_at"]

@@ -2,8 +2,18 @@
 
 Production posture: host-sharded (each process generates only its shard of
 the global batch), deterministic in (seed, step) so restarts resume exactly,
-with a background prefetch thread. Token streams are hash-generated (no
-dataset dependency) with a Zipf-ish marginal so losses behave like text.
+with a background prefetch thread. Token streams are counter-hash-generated
+(no dataset dependency) with a heavy-tailed, log-uniform-ish marginal so
+losses behave like text.
+
+The generator is a pure uint32 counter hash (lowbias32-style avalanche),
+which gives it a property the old numpy-Philox path could not have: an
+exact DEVICE-SIDE twin.  ``device_batch_at`` reproduces ``_batch_at``
+bit-for-bit in jnp (wrap-around uint32 multiply/xor/shift semantics are
+identical in numpy and XLA), and accepts a *traced* step scalar — this is
+what lets the fused train window (train/trainer.py::make_train_window)
+generate its batches inside ``lax.scan`` while the host-side per-step
+oracle consumes the very same tokens from this pipeline (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -13,6 +23,12 @@ import threading
 from typing import Dict, Iterator, Optional
 
 import numpy as np
+
+# lowbias32 avalanche constants (Hash Prospector) + fold/stream salts
+_MIX_A = 0x7FEB352D
+_MIX_B = 0x846CA68B
+_GOLDEN = 0x9E3779B9
+_SALT_SHIFT = 0x85EBCA6B
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,15 +46,59 @@ class DataConfig:
         return self.global_batch // self.num_hosts
 
 
+def _mix32(x, xp):
+    """32-bit avalanche; exact under numpy AND jnp uint32 wrap semantics."""
+    x = x ^ (x >> xp.uint32(16))
+    x = x * xp.uint32(_MIX_A)
+    x = x ^ (x >> xp.uint32(15))
+    x = x * xp.uint32(_MIX_B)
+    x = x ^ (x >> xp.uint32(16))
+    return x
+
+
+def _tokens_at(seed, step, host_id, host_batch: int, seq_len: int,
+               vocab_size: int, xp):
+    """(host_batch, seq_len + 1) int32 token grid for one (seed, step, host).
+
+    Marginal: ``(h1 % vocab) >> (h2 & 15)`` — uniform within each octave,
+    ~equal mass per octave, i.e. log-uniform over the vocab (Zipf exponent
+    ~1).  ``step`` may be a traced jnp scalar (uint32 conversion is exact
+    for any step < 2**31).  All arithmetic is wrap-around uint32, so the
+    numpy and jnp instantiations agree bitwise.
+    """
+    n = host_batch * (seq_len + 1)
+    # fold (seed, step, host) into a stream base; 1-element array on the
+    # numpy path so integer wrap never trips scalar-overflow warnings
+    base = xp.full((1,), _GOLDEN, dtype=xp.uint32)
+    base = _mix32(base ^ xp.asarray(seed).astype(xp.uint32), xp)
+    base = _mix32(base ^ xp.asarray(step).astype(xp.uint32), xp)
+    base = _mix32(base ^ xp.asarray(host_id).astype(xp.uint32), xp)
+    idx = xp.arange(n, dtype=xp.uint32)
+    h1 = _mix32(idx ^ base, xp)
+    h2 = _mix32(h1 ^ xp.uint32(_SALT_SHIFT), xp)
+    tok = (h1 % xp.uint32(vocab_size)) >> (h2 & xp.uint32(15))
+    return tok.astype(xp.int32).reshape(host_batch, seq_len + 1)
+
+
 def _batch_at(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
-    """Deterministic batch for (seed, step, host). Zipf-ish tokens."""
-    rng = np.random.Generator(np.random.Philox(
-        key=cfg.seed, counter=[step, cfg.host_id, 0, 0]))
-    u = rng.random((cfg.host_batch, cfg.seq_len + 1))
-    # inverse-CDF of a truncated zipf(1.1)
-    ranks = (u ** -2.2 - 1.0)
-    tokens = np.clip(ranks.astype(np.int64), 0, cfg.vocab_size - 1)
-    tokens = tokens.astype(np.int32)
+    """Deterministic batch for (seed, step, host). Heavy-tailed tokens."""
+    tokens = _tokens_at(cfg.seed, step, cfg.host_id, cfg.host_batch,
+                        cfg.seq_len, cfg.vocab_size, np)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+def device_batch_at(cfg: DataConfig, step) -> Dict:
+    """Bitwise twin of ``_batch_at`` in jnp; ``step`` may be traced.
+
+    This is the fused train window's batch source: inside one jitted
+    ``lax.scan`` each step hashes its own batch on device, so the host
+    never materializes or transfers training tokens between sync points.
+    Parity with the host path is enforced in tests/test_train_engine.py.
+    """
+    import jax.numpy as jnp
+
+    tokens = _tokens_at(cfg.seed, step, cfg.host_id, cfg.host_batch,
+                        cfg.seq_len, cfg.vocab_size, jnp)
     return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
 
 

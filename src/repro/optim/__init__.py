@@ -1,4 +1,6 @@
 from repro.optim.adamw import AdamW, global_norm
+from repro.optim.compress import CompressedOptimizer, wrap_optimizer
 from repro.optim.schedule import constant, warmup_cosine
 
-__all__ = ["AdamW", "global_norm", "constant", "warmup_cosine"]
+__all__ = ["AdamW", "global_norm", "constant", "warmup_cosine",
+           "CompressedOptimizer", "wrap_optimizer"]

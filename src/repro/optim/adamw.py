@@ -30,8 +30,11 @@ class AdamW:
             "count": jnp.zeros((), jnp.int32),
         }
         if self.master_weights:
+            # jnp.array(copy=True): with f32 params, astype would return
+            # the SAME buffer and donating {params, master} through a
+            # jitted step then aborts with "donate the same buffer twice"
             state["master"] = jax.tree.map(
-                lambda p: p.astype(jnp.float32), params)
+                lambda p: jnp.array(p, jnp.float32, copy=True), params)
         return state
 
     def abstract_state(self, params) -> Dict[str, Any]:

@@ -6,12 +6,19 @@ buffer so the compression bias vanishes over steps. The all-reduce itself
 sums int32-accumulated int8 payloads (8x less link traffic than f32; the
 scale exchange is O(1) per leaf).
 
-``compressed_psum`` is the shard_map building block; ``wrap_optimizer``
-adds error feedback around any repro.optim optimizer.
+``compressed_psum`` is the shard_map/vmap-axis building block (a true SUM
+by default; pass ``mean=True`` for the data-parallel gradient-mean
+convention); ``wrap_optimizer`` adds error feedback around any repro.optim
+optimizer, carrying the error buffer inside the optimizer state so it
+checkpoints, reshards, and donates with the rest of the train state.  The
+fused train window (train/trainer.py) consumes both: per-shard gradients
+combine through ``compressed_psum`` under a named data axis, and the
+wrapped optimizer keeps the int8 path unbiased over steps.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,22 +34,49 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def compressed_psum(tree, axis_name: str):
+def _unzip_pairs(pairs):
+    """Split a pytree of (a, b) leaf tuples into two pytrees."""
+    is_pair = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair),
+            jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair))
+
+
+def compressed_psum(tree, axis_name: str, *, mean: bool = False):
     """psum a pytree of f32 grads with int8 payload over ``axis_name``.
 
-    Must run inside shard_map/pmap. Accumulation is int32 (safe for up to
-    ~2^23 shards); the per-leaf scale is max-reduced first so all shards
-    quantize against a common scale (required for correct summation).
+    Must run under a named mapped axis (shard_map/pmap/vmap). Accumulation
+    is int32 (safe for up to ~2^23 shards); the per-leaf scale is
+    max-reduced first so all shards quantize against a common scale
+    (required for correct summation).
+
+    This is a true SUM (matching its name and ``jax.lax.psum``); the seed
+    implementation silently divided by the shard count.  Data-parallel
+    gradient averaging is the explicit ``mean=True`` contract.
+    """
+    # the unused residual is dead-code-eliminated under jit
+    return compressed_psum_ef(tree, axis_name, mean=mean)[0]
+
+
+def compressed_psum_ef(tree, axis_name: str, *, mean: bool = False):
+    """``compressed_psum`` that also returns each shard's local residual.
+
+    Returns ``(combined, err)``: ``combined`` is the int8-payload
+    sum/mean over ``axis_name`` and ``err`` the THIS-shard quantization
+    residual ``x - dequant(quant(x))`` — exactly what error-feedback DP
+    banks per worker before the all-reduce, so the combine-stage
+    compression bias vanishes over steps instead of accumulating.
     """
     def one(x):
         xf = x.astype(jnp.float32)
         scale = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name) / 127.0 + 1e-12
         q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
-        s = jax.lax.psum(q, axis_name)
-        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-        return (s.astype(jnp.float32) * scale / n).astype(x.dtype)
+        local_deq = q.astype(jnp.float32) * scale
+        s = jax.lax.psum(q, axis_name).astype(jnp.float32) * scale
+        if mean:
+            s = s / jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return s.astype(x.dtype), xf - local_deq
 
-    return jax.tree.map(one, tree)
+    return _unzip_pairs(jax.tree.map(one, tree))
 
 
 def init_error_state(params) -> Any:
@@ -57,9 +91,81 @@ def apply_error_feedback(grads, err_state):
         deq = dequantize(q, scale)
         return deq, corrected - deq
 
-    pairs = jax.tree.map(one, grads, err_state)
-    comp = jax.tree.map(lambda p: p[0], pairs,
-                        is_leaf=lambda x: isinstance(x, tuple))
-    err = jax.tree.map(lambda p: p[1], pairs,
-                       is_leaf=lambda x: isinstance(x, tuple))
-    return comp, err
+    return _unzip_pairs(jax.tree.map(one, grads, err_state))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedOptimizer:
+    """Error-feedback int8 wrapper around a repro.optim optimizer.
+
+    State is ``{"inner": <inner opt state>, "err": <f32 error buffers>}``,
+    so the error feedback checkpoints/reshards/donates exactly like the
+    Adam moments.  Each gradient is quantized exactly ONCE and its
+    residual banked where the quantization happened:
+
+      * ``shards == 1`` — ``update`` adds the carried error to the
+        incoming (already-reduced) gradient, int8-quantizes it, feeds the
+        dequantized value to the inner optimizer, and banks the residual;
+      * ``shards > 1`` — ``update`` takes PER-SHARD-group gradients
+        (stacked on a leading ``(shards,)`` axis; error buffers carry the
+        same axis, i.e. per-worker EF state, data-axis-sharded on a real
+        mesh) and combines them through ``compressed_psum_ef(mean=True)``
+        under a named data axis, banking each shard's own residual BEFORE
+        the reduce — the 1-bit-Adam-family schedule; the combined
+        gradient goes to the inner optimizer un-re-quantized.
+    """
+
+    inner: Any
+    shards: int = 1
+
+    def _err_like(self, p):
+        shape = ((self.shards,) + tuple(p.shape) if self.shards > 1
+                 else tuple(p.shape))
+        return shape
+
+    def init(self, params) -> Dict[str, Any]:
+        return {"inner": self.inner.init(params),
+                "err": jax.tree.map(
+                    lambda p: jnp.zeros(self._err_like(p), jnp.float32),
+                    params)}
+
+    def abstract_state(self, params) -> Dict[str, Any]:
+        return {"inner": self.inner.abstract_state(params),
+                "err": jax.tree.map(
+                    lambda p: jax.ShapeDtypeStruct(self._err_like(p),
+                                                   jnp.float32),
+                    params)}
+
+    def state_axes(self, param_axes) -> Dict[str, Any]:
+        err_axes = param_axes
+        if self.shards > 1:  # leading per-shard dim lives on the data axis
+            err_axes = jax.tree.map(
+                lambda a: ("batch",) + tuple(a), param_axes,
+                is_leaf=lambda x: isinstance(x, (tuple, list)))
+        return {"inner": self.inner.state_axes(param_axes),
+                "err": err_axes}
+
+    def update(self, grads, state, params):
+        """``grads``: reduced gradients (``shards == 1``) or per-shard
+        stacked gradients on a leading ``(shards,)`` axis."""
+        if self.shards == 1:
+            comp, err = apply_error_feedback(grads, state["err"])
+        else:
+            def one_shard(g, e):
+                corrected = jax.tree.map(
+                    lambda gl, el: gl.astype(jnp.float32) + el, g, e)
+                return compressed_psum_ef(corrected, "dp", mean=True)
+
+            comp, err = jax.vmap(one_shard, axis_name="dp")(
+                grads, state["err"])
+            comp = jax.tree.map(lambda x: x[0], comp)  # replicated rows
+        new_params, new_inner, metrics = self.inner.update(
+            comp, state["inner"], params)
+        return new_params, {"inner": new_inner, "err": err}, metrics
+
+
+def wrap_optimizer(opt, shards: int = 1) -> CompressedOptimizer:
+    """Error-feedback int8 compression around ``opt`` (see class above)."""
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    return CompressedOptimizer(inner=opt, shards=shards)

@@ -39,23 +39,54 @@ def _flatten(tree) -> Dict[str, Any]:
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
+        if keep < 1:
+            # keep=0 used to hit ``steps[:-0] == []`` in _gc, silently
+            # turning retention off instead of doing anything sane
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._recover()
+
+    def _recover(self):
+        """Crash-recovery sweep for interrupted re-save swaps: a crash
+        between the two renames in ``_write`` leaves the data only under
+        ``step_N.old`` — republish it; if the swap completed, the leftover
+        ``.old`` is garbage — drop it."""
+        for old in self.dir.glob("step_*.old"):
+            final = self.dir / old.name[:-len(".old")]
+            if final.exists():
+                shutil.rmtree(old, ignore_errors=True)
+            else:
+                os.rename(old, final)
 
     # ---- save -----------------------------------------------------------
     def save(self, step: int, state: Any, *, blocking: bool = False,
              extra: Optional[Dict] = None):
-        """Snapshot ``state`` (device->host copy now), serialize async."""
+        """Snapshot ``state`` (device->host copy now), serialize async.
+
+        Raises any exception the PREVIOUS async write died with (see
+        ``wait``) before starting the new one — writer failures never die
+        invisibly in the daemon thread.
+        """
         flat = _flatten(state)
         host = {k: np.asarray(v) for k, v in flat.items()}
         self.wait()
         self._thread = threading.Thread(
-            target=self._write, args=(step, host, extra or {}), daemon=True)
+            target=self._write_guarded, args=(step, host, extra or {}),
+            daemon=True)
         self._thread.start()
         if blocking:
             self.wait()
+
+    def _write_guarded(self, step: int, host: Dict[str, np.ndarray],
+                       extra: Dict):
+        try:
+            self._write(step, host, extra)
+        except BaseException as e:  # surfaced by wait()/next save()
+            self._error = e
 
     def _write(self, step: int, host: Dict[str, np.ndarray], extra: Dict):
         tmp = self.dir / f"step_{step}.tmp"
@@ -72,12 +103,31 @@ class CheckpointManager:
                 "file": fname, "shape": list(arr.shape),
                 "dtype": str(arr.dtype)}
         (tmp / "manifest.json").write_text(json.dumps(manifest))
-        os.replace(tmp, final)  # atomic on POSIX
+        if final.exists():
+            # re-saving an existing step: os.replace onto a non-empty dir
+            # raises, so swap — park the old dir under a name all_steps()
+            # ignores, publish the new one, then drop the old.  A crash
+            # between the renames leaves the step only under ``.old``;
+            # the ``_recover`` sweep on next startup republishes it, so
+            # either the old or the new checkpoint survives, never a
+            # corrupt mix.
+            old = self.dir / f"step_{step}.old"
+            if old.exists():
+                shutil.rmtree(old)
+            os.rename(final, old)
+            os.rename(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, final)  # atomic on POSIX
         self._gc()
 
     def wait(self):
+        """Block until the in-flight write finishes; re-raise its error."""
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = sorted(self.all_steps())
@@ -120,6 +170,11 @@ class CheckpointManager:
             if meta is None:
                 raise KeyError(f"checkpoint at step {step} missing {key!r}")
             arr = np.load(d / meta["file"])
+            if str(arr.dtype) != meta["dtype"]:
+                # np.load hands ml_dtypes leaves (bf16, f8) back as raw
+                # void records ('|V2'); reinterpret via the manifest dtype
+                import jax.numpy as jnp
+                arr = arr.view(jnp.dtype(meta["dtype"]))
             if tuple(arr.shape) != tuple(ref.shape):
                 raise ValueError(
                     f"{key}: checkpoint shape {arr.shape} != {ref.shape}")

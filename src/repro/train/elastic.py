@@ -64,6 +64,12 @@ class StragglerMonitor:
                            + (1 - self.ema_coef) * prev)
 
     def stragglers(self) -> List[int]:
+        """Advance strike counters one step and report hosts that crossed
+        ``patience``.  This MUTATES state — call it exactly once per
+        recorded step (the seed launcher called it twice per step, double-
+        counting strikes).  A reported host's strikes reset, so it is
+        reported once per sustained episode instead of on every subsequent
+        call (the eviction it triggers is not instantaneous)."""
         if len(self._ema) < max(2, self.num_hosts // 2):
             return []
         med = statistics.median(self._ema.values())
@@ -75,6 +81,7 @@ class StragglerMonitor:
                 self._strikes[h] = 0
             if self._strikes[h] >= self.patience:
                 out.append(h)
+                self._strikes[h] = 0
         return out
 
 

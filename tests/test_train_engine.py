@@ -1,0 +1,215 @@
+"""Fused train window: device-batch bitwise parity, window-vs-oracle loss
+trajectories (plain / microbatched / compressed), window checkpointing +
+exact resume, and the train-traffic -> crosslayer verdict handoff
+(DESIGN.md §12)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.crosslayer import analyze_train
+from repro.data import DataConfig, Pipeline, batch_for_step, device_batch_at
+from repro.models import build_model
+from repro.optim import AdamW, constant
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import (effective_optimizer, init_state,
+                                 make_train_step, make_train_window)
+
+SEQ, BATCH, K = 8, 4, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("llama3-8b"), dtype="float32", num_layers=1,
+                  d_model=16, d_ff=32, num_heads=1, num_kv_heads=1,
+                  head_dim=16, vocab_size=128)
+    model = build_model(cfg, max_seq=SEQ)
+    opt = AdamW(lr=constant(1e-3), weight_decay=0.0)
+    dcfg = DataConfig(cfg.vocab_size, SEQ, BATCH)
+    return model, opt, dcfg
+
+
+# --- device-side batch generation --------------------------------------------
+
+
+def test_device_batch_bitwise_matches_host():
+    for seed, step, hosts, hid in ((0, 0, 1, 0), (3, 17, 1, 0),
+                                   (1, 12345, 2, 1)):
+        cfg = DataConfig(512, 16, 4 * hosts, seed=seed, num_hosts=hosts,
+                         host_id=hid)
+        host = batch_for_step(cfg, step)
+        dev = jax.tree.map(np.asarray, device_batch_at(cfg, step))
+        np.testing.assert_array_equal(host["tokens"], dev["tokens"])
+        np.testing.assert_array_equal(host["labels"], dev["labels"])
+
+
+def test_device_batch_traced_step_in_scan():
+    cfg = DataConfig(256, 8, 2)
+
+    @jax.jit
+    def all_batches(start):
+        def body(step, _):
+            return step + 1, device_batch_at(cfg, step)["tokens"]
+        _, toks = jax.lax.scan(body, start, None, length=3)
+        return toks
+
+    toks = np.asarray(all_batches(jnp.int32(5)))
+    for i in range(3):
+        np.testing.assert_array_equal(
+            toks[i], batch_for_step(cfg, 5 + i)["tokens"])
+
+
+def test_device_batch_tokens_in_vocab_and_shifted():
+    cfg = DataConfig(128, 16, 4)
+    b = jax.tree.map(np.asarray, device_batch_at(cfg, 9))
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 128
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# --- window vs per-step oracle ------------------------------------------------
+
+
+def _oracle_losses(model, opt, dcfg, steps, **step_kw):
+    opt_eff = effective_optimizer(opt,
+                                  step_kw.get("compress_grads", False),
+                                  step_kw.get("compress_shards", 1))
+    state = init_state(model, opt_eff, jax.random.PRNGKey(0))
+    fn = jax.jit(make_train_step(model, opt, **step_kw),
+                 donate_argnums=(0,))
+    data = Pipeline(dcfg)
+    out = []
+    for _ in range(steps):
+        state, m = fn(state, jax.tree.map(jnp.asarray, next(data)))
+        out.append((float(m["loss"]), float(m["grad_norm"])))
+    data.close()
+    return out, state
+
+
+def _window_losses(model, opt, dcfg, steps, **win_kw):
+    opt_eff = effective_optimizer(opt,
+                                  win_kw.get("compress_grads", False),
+                                  win_kw.get("compress_shards", 1))
+    state = init_state(model, opt_eff, jax.random.PRNGKey(0))
+    win = make_train_window(model, opt, steps_per_sync=steps, data_cfg=dcfg,
+                            record_traffic=False, **win_kw)
+    state, m = win(state)
+    return list(zip(np.asarray(m["loss"]).tolist(),
+                    np.asarray(m["grad_norm"]).tolist())), state
+
+
+@pytest.mark.parametrize("kw", [
+    {},
+    {"microbatches": 2},
+    {"compress_grads": True, "compress_shards": 2},
+    {"microbatches": 2, "compress_grads": True, "compress_shards": 2},
+], ids=["plain", "microbatched", "compressed", "micro+compressed"])
+def test_window_matches_per_step_oracle(setup, kw):
+    model, opt, dcfg = setup
+    oracle, s1 = _oracle_losses(model, opt, dcfg, K, **kw)
+    fused, s2 = _window_losses(model, opt, dcfg, K, **kw)
+    assert fused == oracle  # bitwise: same tokens, same step program
+    np.testing.assert_array_equal(np.asarray(s1["params"]["emb/tok"]),
+                                  np.asarray(s2["params"]["emb/tok"]))
+    assert int(s2["step"]) == K
+
+
+def test_window_step_counter_is_data_position(setup):
+    # two windows == one double-length window: the step counter carried in
+    # state is the only data cursor, so trajectories must concatenate
+    model, opt, dcfg = setup
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    win = make_train_window(model, opt, steps_per_sync=2, data_cfg=dcfg,
+                            record_traffic=False)
+    state, m1 = win(state)
+    state, m2 = win(state)
+    both = np.concatenate([np.asarray(m1["loss"]), np.asarray(m2["loss"])])
+    fused, _ = _window_losses(model, opt, dcfg, 4)
+    np.testing.assert_array_equal(both, np.asarray([l for l, _ in fused]))
+
+
+def test_window_checkpoint_restore_resumes_exactly(setup, tmp_path):
+    model, opt, dcfg = setup
+    win = make_train_window(model, opt, steps_per_sync=2, data_cfg=dcfg,
+                            record_traffic=False)
+    mgr = CheckpointManager(str(tmp_path))
+
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    state, _ = win(state)                       # window 1 (steps 0-1)
+    mgr.save(2, state, blocking=True)
+    state, m_cont = win(state)                  # window 2, uninterrupted
+
+    like = init_state(model, opt, jax.random.PRNGKey(1))  # different init
+    restored = mgr.restore(like)
+    assert int(restored["step"]) == 2
+    restored, m_res = win(restored)             # window 2 after restore
+    np.testing.assert_array_equal(np.asarray(m_cont["loss"]),
+                                  np.asarray(m_res["loss"]))
+    np.testing.assert_array_equal(np.asarray(m_cont["grad_norm"]),
+                                  np.asarray(m_res["grad_norm"]))
+
+
+def test_window_validates_args(setup):
+    model, opt, dcfg = setup
+    with pytest.raises(ValueError):
+        make_train_window(model, opt, steps_per_sync=0, data_cfg=dcfg)
+    with pytest.raises(ValueError):  # 4 rows not divisible by 3 chunks
+        make_train_window(model, opt, steps_per_sync=1, microbatches=3,
+                          data_cfg=dcfg)
+    with pytest.raises(ValueError):  # shards without compression
+        make_train_step(model, opt, compress_shards=2)
+
+
+# --- train-traffic -> crosslayer handoff -------------------------------------
+
+
+def test_train_records_and_verdicts(setup):
+    model, opt, dcfg = setup
+    win = make_train_window(model, opt, steps_per_sync=2, data_cfg=dcfg)
+    assert win.train_records() == []            # nothing ran yet
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    state, _ = win(state)
+    state, _ = win(state)
+    recs = win.train_records()
+    assert len(recs) == 1 and recs[0]["kind"] == "train"
+    assert recs[0]["steps"] == 4                # 2 windows x K=2
+    roof = recs[0]["roofline"]
+    assert roof["flops_per_device"] > 0 and roof["bytes_per_device"] > 0
+    verdicts = win.nvm_verdicts()
+    assert len(verdicts) == 1
+    v = verdicts[0]
+    assert v.shape == f"train_window_b{BATCH}_s{SEQ}_k2"
+    for mem in ("STT", "SOT"):
+        assert v.energy_ratio[mem] > 0 and v.edp_ratio[mem] > 0
+
+
+def test_analyze_train_uses_write_heavier_split():
+    # same roofline terms must score differently by mode: analyze_train
+    # splits with TRAIN_READ_FRACTION (more writes), analyze_serve with
+    # the read-heavy inference convention — the verdict really does
+    # depend on the R/W mix, not just byte totals
+    from repro.core.crosslayer import (READ_FRACTION, TRAIN_READ_FRACTION,
+                                       analyze_serve)
+    assert TRAIN_READ_FRACTION < READ_FRACTION
+    rec = {"arch": "x", "mesh": "1dev", "shape": "t", "kind": "train",
+           "roofline": {"flops_per_device": 1e12, "bytes_per_device": 1e9,
+                        "collective_bytes": 0.0, "compute_s": 1e-3,
+                        "memory_s": 2e-3, "collective_s": 0.0}}
+    t = analyze_train([rec])[0]
+    s = analyze_serve([rec])[0]
+    assert t.writes > s.writes and t.reads < s.reads
+    assert t.reads / (t.reads + t.writes) == pytest.approx(
+        TRAIN_READ_FRACTION)
+    for mem in ("STT", "SOT"):
+        # at the calibrated 100+MB tier, sectored MRAM writes come out
+        # CHEAPER than SRAM line writes, so the write-heavier train mix
+        # shifts the energy ratio in MRAM's favor — the point is that it
+        # shifts (direction pinned so a silent split regression fails)
+        assert t.energy_ratio[mem] < s.energy_ratio[mem]
+
+
+def test_analyze_train_missing_roofline_raises():
+    with pytest.raises(ValueError, match="record_traffic"):
+        analyze_train([{"arch": "x", "mesh": "1dev", "shape": "t",
+                        "roofline": {"bytes_per_device": 1.0}}])
+    assert analyze_train([]) == []
