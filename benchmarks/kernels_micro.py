@@ -1,17 +1,37 @@
-"""Microbenchmarks: Pallas kernels (interpret mode) vs jnp oracles."""
+"""Microbenchmarks: Pallas kernels (interpret mode) vs jnp oracles.
+
+Every kernel is checked against its jnp/python oracle and the max
+absolute error is ENFORCED against ``ERR_BOUND`` — this module is a CI
+gate (`python -m benchmarks.run --only kernels_micro`), not just a
+timer.  Results land in ``BENCH_kernels.json`` next to the other BENCH
+artifacts so error drift is visible across PRs.
+"""
 from __future__ import annotations
+
+from datetime import datetime, timezone
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import run_and_emit
+from benchmarks.common import append_bench_record, run_and_emit
 from repro.kernels import ops, ref
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+ERR_BOUND = 2e-2
 
 
 def run():
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
+    errors: dict[str, float] = {}
+    failures: list[str] = []
+
+    def check(name: str, err: float):
+        errors[name] = err
+        if not err <= ERR_BOUND:
+            failures.append(f"{name}: max|err| {err:.3e} > {ERR_BOUND:.0e}")
 
     def flash():
         q = jax.random.normal(ks[1], (1, 4, 256, 64))
@@ -21,8 +41,56 @@ def run():
         r = ref.flash_attention_ref(q, k, v)
         return float(jnp.max(jnp.abs(o - r)))
 
-    run_and_emit("kernel_flash_attention", flash,
-                 lambda d: f"max|err| vs oracle = {d:.2e}")
+    check("kernel_flash_attention",
+          run_and_emit("kernel_flash_attention", flash,
+                       lambda d: f"max|err| vs oracle = {d:.2e}"))
+
+    def decode():
+        B, L, H, K, hd = 4, 128, 4, 2, 64
+        q = jax.random.normal(ks[1], (B, H, hd))
+        k = jax.random.normal(ks[2], (B, L, K, hd))
+        v = jax.random.normal(ks[3], (B, L, K, hd))
+        pos = jnp.array([0, 17, 63, 127], jnp.int32)
+        win = jnp.asarray(24, jnp.int32)
+        o = ops.decode_attention(q, k, v, pos, win, logit_cap=30.0, bk=32)
+        r = ref.decode_attention_ref(q, k, v, pos, 24, logit_cap=30.0)
+        return float(jnp.max(jnp.abs(o - r)))
+
+    check("kernel_decode_attention",
+          run_and_emit("kernel_decode_attention", decode,
+                       lambda d: f"max|err| vs oracle = {d:.2e}"))
+
+    def decode_fused():
+        # Fused KV scatter: the new token's row must land in the cache
+        # bit-identically to the jnp .at[].set path, rows past each
+        # slot's pos must be untouched, and attention must already see
+        # the new row (self-attention term) in the same launch.
+        B, L, H, K, hd = 4, 128, 4, 2, 64
+        q = jax.random.normal(ks[1], (B, H, hd))
+        k = jax.random.normal(ks[2], (B, L, K, hd))
+        v = jax.random.normal(ks[3], (B, L, K, hd))
+        nk = jax.random.normal(ks[0], (B, K, hd))
+        nv = jax.random.normal(ks[1], (B, K, hd))
+        pos = jnp.array([0, 17, 63, 127], jnp.int32)
+        win = jnp.asarray(0, jnp.int32)
+        o, ck, cv = ops.decode_attention_fused(
+            q, k, v, nk, nv, pos, win, bk=32)
+        rows = jnp.arange(B)
+        k2 = k.at[rows, pos].set(nk)
+        v2 = v.at[rows, pos].set(nv)
+        r = ref.decode_attention_ref(q, k2, v2, pos, 0)
+        err = float(jnp.max(jnp.abs(o - r)))
+        scatter_ok = bool(jnp.array_equal(ck, k2) & jnp.array_equal(cv, v2))
+        return err, scatter_ok
+
+    err, scatter_ok = run_and_emit(
+        "kernel_decode_attention_fused", decode_fused,
+        lambda d: f"max|err| vs oracle = {d[0]:.2e}, scatter bitwise: {d[1]}")
+    check("kernel_decode_attention_fused", err)
+    if not scatter_ok:
+        failures.append(
+            "kernel_decode_attention_fused: fused KV scatter is not "
+            "bitwise-identical to the jnp .at[].set path")
 
     def ssd():
         x = jax.random.normal(ks[1], (1, 4, 256, 32))
@@ -35,8 +103,9 @@ def run():
         r = ref.ssd_scan_ref(x, dt, dtA, Bm, Cm)
         return float(jnp.max(jnp.abs(y - r)))
 
-    run_and_emit("kernel_ssd_scan", ssd,
-                 lambda d: f"max|err| vs oracle = {d:.2e}")
+    check("kernel_ssd_scan",
+          run_and_emit("kernel_ssd_scan", ssd,
+                       lambda d: f"max|err| vs oracle = {d:.2e}"))
 
     def rglru():
         a = jax.nn.sigmoid(jax.random.normal(ks[1], (2, 512, 256)))
@@ -45,8 +114,9 @@ def run():
         r = ref.rglru_scan_ref(a, b)
         return float(jnp.max(jnp.abs(y - r)))
 
-    run_and_emit("kernel_rglru_scan", rglru,
-                 lambda d: f"max|err| vs oracle = {d:.2e}")
+    check("kernel_rglru_scan",
+          run_and_emit("kernel_rglru_scan", rglru,
+                       lambda d: f"max|err| vs oracle = {d:.2e}"))
 
     def csim():
         rng = np.random.RandomState(0)
@@ -57,5 +127,18 @@ def run():
         h2, m2 = ref.cache_sim_python(sid, tg, num_sets=128, ways=8)
         return (int(h1), int(m1)) == (h2, m2)
 
-    run_and_emit("kernel_cache_sim", csim,
-                 lambda ok: f"kernel==python-LRU: {ok}")
+    lru_ok = run_and_emit("kernel_cache_sim", csim,
+                          lambda ok: f"kernel==python-LRU: {ok}")
+    if not lru_ok:
+        failures.append("kernel_cache_sim: kernel disagrees with python LRU")
+
+    append_bench_record(BENCH_PATH, {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "err_bound": ERR_BOUND,
+        "max_abs_err": errors,
+        "cache_sim_exact": bool(lru_ok),
+        "fused_scatter_bitwise": scatter_ok,
+        "pass": not failures,
+    })
+    if failures:
+        raise AssertionError("; ".join(failures))

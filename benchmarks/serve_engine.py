@@ -1,16 +1,20 @@
 """Serve-engine speedup: fused device-resident windows vs the seed path.
 
 Runs the same mixed workload (staggered arrivals, uneven prompt/output
-lengths, all-greedy for parity) through the fused ``Engine`` (batched
-masked-scatter prefill + K fused decode ticks per host sync) and through
-``EngineReference`` (the seed per-tick path: per-token prefill, one host
-round-trip per tick), verifies token-for-token greedy parity, and appends
-a record to ``BENCH_serve.json`` at the repo root.  Floors enforced here
-(and in CI): parity must hold and the warm speedup must be >= 10x.
+lengths, all-greedy for parity) through the fused ``Engine`` — once per
+decode-attention implementation (``xla`` jnp path, ``pallas_decode``
+blocked kernel with fused KV scatter, interpret mode on CPU) — and
+through ``EngineReference`` (the seed per-tick path: per-token prefill,
+one host round-trip per tick).  Each leg verifies token-for-token greedy
+parity against the reference and appends its OWN record to
+``BENCH_serve.json`` with an ``attn_impl`` field, so a future regression
+is attributable to the kernel or to the engine.  Floors enforced here
+(and in CI): parity must hold and the warm speedup must be >= 10x on
+every leg.
 
-The record also carries the engine's serve-mode NVM verdicts — the
-decode-tick SRAM vs STT/SOT energy/EDP ratios from the measured traffic
-(core.crosslayer.analyze_serve), closing the loop to the paper.
+The xla-leg record also carries the engine's serve-mode NVM verdicts —
+the decode-tick SRAM vs STT/SOT energy/EDP ratios from the measured
+traffic (core.crosslayer.analyze_serve), closing the loop to the paper.
 """
 from __future__ import annotations
 
@@ -36,6 +40,7 @@ N_REQUESTS = 16
 PROMPT_LENS = (32, 56)       # serving is prompt-heavy; the seed prefills
 MAX_NEW = (4, 10)            # these one decode_step call per prompt token
 SPEEDUP_FLOOR = 10.0
+ATTN_IMPLS = ("xla", "pallas_decode")
 
 
 def _workload(seed: int):
@@ -52,19 +57,6 @@ def run():
     model = build_model(cfg, max_seq=MAX_LEN)
     params = model.init(jax.random.PRNGKey(0))
 
-    eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
-                 ticks_per_sync=TICKS_PER_SYNC, record_traffic=True)
-    t0 = time.perf_counter()
-    _drive(eng, seed=0)                       # cold: compiles + traffic
-    cold_s = time.perf_counter() - t0
-
-    engine_s, out_eng = 1e9, None
-    for _ in range(3):
-        eng.reset()
-        t0 = time.perf_counter()
-        out_eng = _drive(eng, seed=1)
-        engine_s = min(engine_s, time.perf_counter() - t0)
-
     ref = EngineReference(model, params, slots=SLOTS, max_len=MAX_LEN)
     _drive(ref, seed=0)                       # warm the decode jit
     legacy_s = 1e9                            # min-of-2: favors the seed path
@@ -73,44 +65,66 @@ def run():
         t0 = time.perf_counter()
         out_ref = _drive(ref, seed=1)
         legacy_s = min(legacy_s, time.perf_counter() - t0)
-
-    parity = out_eng == out_ref
-    tokens = sum(len(o) for o in out_eng.values())
-    eng_tps = tokens / engine_s
+    tokens = sum(len(o) for o in out_ref.values())
     ref_tps = tokens / legacy_s
-    speedup = legacy_s / engine_s
-    verdicts = {
-        v.shape: {"energy_ratio": v.energy_ratio, "edp_ratio": v.edp_ratio}
-        for v in eng.nvm_verdicts()}
 
-    record = {
-        "timestamp": datetime.now(timezone.utc).isoformat(),
-        "grid": (f"{N_REQUESTS} reqs x prompts {PROMPT_LENS} x new "
-                 f"{MAX_NEW} on {SLOTS} slots, max_len {MAX_LEN}, "
-                 f"K={TICKS_PER_SYNC} ({ARCH} reduced)"),
-        "engine_s": engine_s,
-        "engine_cold_s": cold_s,
-        "legacy_per_tick_s": legacy_s,
-        "warm_tokens_per_s": eng_tps,
-        "reference_tokens_per_s": ref_tps,
-        "speedup": speedup,
-        "speedup_floor": SPEEDUP_FLOOR,
-        "greedy_parity": parity,
-        "nvm_verdicts": verdicts,
-    }
-    append_bench_record(BENCH_PATH, record)
+    failures = []
+    for attn_impl in ATTN_IMPLS:
+        eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                     ticks_per_sync=TICKS_PER_SYNC,
+                     record_traffic=(attn_impl == "xla"),
+                     attn_impl=attn_impl)
+        t0 = time.perf_counter()
+        _drive(eng, seed=0)                   # cold: compiles + traffic
+        cold_s = time.perf_counter() - t0
 
-    emit("serve_engine", engine_s * 1e6,
-         f"ref {ref_tps:.0f} tok/s -> fused {eng_tps:.0f} tok/s = "
-         f"{speedup:.1f}x | parity={'ok' if parity else 'MISMATCH'} | "
-         f"-> {BENCH_PATH.name}")
-    if not parity:
-        raise AssertionError(
-            "fused engine greedy tokens diverge from engine_reference")
-    if speedup < SPEEDUP_FLOOR:
-        raise AssertionError(
-            f"serve engine speedup {speedup:.1f}x below the "
-            f"{SPEEDUP_FLOOR:.0f}x floor")
+        engine_s, out_eng = 1e9, None
+        for _ in range(3):
+            eng.reset()
+            t0 = time.perf_counter()
+            out_eng = _drive(eng, seed=1)
+            engine_s = min(engine_s, time.perf_counter() - t0)
+
+        parity = out_eng == out_ref
+        eng_tps = tokens / engine_s
+        speedup = legacy_s / engine_s
+        verdicts = {
+            v.shape: {"energy_ratio": v.energy_ratio,
+                      "edp_ratio": v.edp_ratio}
+            for v in eng.nvm_verdicts()}
+
+        record = {
+            "timestamp": datetime.now(timezone.utc).isoformat(),
+            "grid": (f"{N_REQUESTS} reqs x prompts {PROMPT_LENS} x new "
+                     f"{MAX_NEW} on {SLOTS} slots, max_len {MAX_LEN}, "
+                     f"K={TICKS_PER_SYNC} ({ARCH} reduced)"),
+            "attn_impl": attn_impl,
+            "engine_s": engine_s,
+            "engine_cold_s": cold_s,
+            "legacy_per_tick_s": legacy_s,
+            "warm_tokens_per_s": eng_tps,
+            "reference_tokens_per_s": ref_tps,
+            "speedup": speedup,
+            "speedup_floor": SPEEDUP_FLOOR,
+            "greedy_parity": parity,
+            "nvm_verdicts": verdicts,
+        }
+        append_bench_record(BENCH_PATH, record)
+
+        emit(f"serve_engine_{attn_impl}", engine_s * 1e6,
+             f"ref {ref_tps:.0f} tok/s -> fused {eng_tps:.0f} tok/s = "
+             f"{speedup:.1f}x | parity={'ok' if parity else 'MISMATCH'} | "
+             f"-> {BENCH_PATH.name}")
+        if not parity:
+            failures.append(
+                f"{attn_impl}: fused engine greedy tokens diverge from "
+                "engine_reference")
+        if speedup < SPEEDUP_FLOOR:
+            failures.append(
+                f"{attn_impl}: serve engine speedup {speedup:.1f}x below "
+                f"the {SPEEDUP_FLOOR:.0f}x floor")
+    if failures:
+        raise AssertionError("; ".join(failures))
 
 
 if __name__ == "__main__":

@@ -76,7 +76,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     G = H // K
     bq = min(bq, Sq)
     bk = min(bk, Skv)
-    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    if Sq % bq or Skv % bk:
+        # a bare assert here was stripped under ``python -O`` and let
+        # non-divisible shapes run off the end of the last block
+        raise ValueError(
+            f"flash_attention needs divisible blocks: Sq={Sq} % bq={bq} = "
+            f"{Sq % bq}, Skv={Skv} % bk={bk} = {Skv % bk}")
     nq, nk = Sq // bq, Skv // bk
     grid = (B, H, nq, nk)
 

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cache_sim as _cs
+from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssd_scan as _ssd
@@ -30,6 +31,30 @@ def flash_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                logit_cap=logit_cap, bq=bq, bk=bk,
                                interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("logit_cap", "bk", "interpret"))
+def decode_attention(q, k, v, pos, window, *, logit_cap=0.0, bk=128,
+                     interpret=None):
+    """Blocked serve-decode attention (cache already holds the new row).
+
+    q (B,H,hd); k/v (B,L,K,hd); pos (B,) i32; window i32 scalar (may be
+    traced; <= 0 = global) -> (B,H,hd)."""
+    return _da.decode_attention(q, k, v, pos, window, logit_cap=logit_cap,
+                                bk=bk, interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("logit_cap", "bk", "interpret"))
+def decode_attention_fused(q, k, v, new_k, new_v, pos, window, *,
+                           logit_cap=0.0, bk=128, interpret=None):
+    """Fused per-row KV scatter + blocked decode attention.
+
+    Writes new_k/new_v (B,K,hd) at each row's own pos[b] inside the
+    launch (aliased caches, no separate dynamic_update_slice pass) and
+    returns (o, k_cache, v_cache)."""
+    return _da.decode_attention_fused(
+        q, k, v, new_k, new_v, pos, window, logit_cap=logit_cap, bk=bk,
+        interpret=_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

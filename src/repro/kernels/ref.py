@@ -29,6 +29,29 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, logit_cap=0.0):
     return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
 
 
+def decode_attention_ref(q, k, v, pos, window=0, *, logit_cap=0.0):
+    """Kernel-layout oracle for the serve decode kernel: q (B,H,hd);
+    k/v (B,L,K,hd) full cache buffers; pos (B,) — row b attends
+    ``k_idx <= pos[b]`` (inside its local window when ``window`` > 0;
+    <= 0 = global).  Full (B,H,L) logits, plain softmax."""
+    B, H, hd = q.shape
+    _, L, K, _ = k.shape
+    G = H // K
+    qr = q.reshape(B, K, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgh,btkh->bkgt", qr, k.astype(jnp.float32))
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_idx = jnp.arange(L, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    w = jnp.asarray(window, jnp.int32)
+    ok = k_idx[None, :] <= pos[:, None]
+    ok &= (w <= 0) | (k_idx[None, :] > pos[:, None] - w)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, dtA, Bmat, Cmat):
     """Naive O(S^2) SSD. x (B,H,S,P); dt/dtA (B,H,S); B/C (B,S,N)."""
     B, H, S, P = x.shape

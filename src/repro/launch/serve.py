@@ -35,6 +35,11 @@ def main():
                     help="smoke-sized config (--no-reduced for full size)")
     ap.add_argument("--ticks-per-sync", type=int, default=8,
                     help="fused decode ticks per host drain (K)")
+    ap.add_argument("--attn-impl", choices=("xla", "pallas_decode"),
+                    default="xla",
+                    help="decode-tick attention: jnp full-cache path (the "
+                         "parity oracle) or the Pallas blocked kernel with "
+                         "fused KV scatter (interpret mode on CPU)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for every 2nd request "
                          "(0 = all greedy)")
@@ -56,7 +61,8 @@ def main():
         params = jax.tree.map(jax.device_put, params, p_sh)
         eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
                      seed=args.seed, ticks_per_sync=args.ticks_per_sync,
-                     record_traffic=args.verdicts)
+                     record_traffic=args.verdicts,
+                     attn_impl=args.attn_impl)
         reqs = mixed_requests(
             args.requests, seed=args.seed, vocab=cfg.vocab_size,
             prompt_lens=(2, max(2, args.max_len // 4)),
@@ -68,8 +74,8 @@ def main():
         dt = time.time() - t0
     ntok = sum(len(o) for o in outputs.values())
     print(f"served {args.requests} requests / {ntok} tokens in "
-          f"{eng.ticks} ticks (K={args.ticks_per_sync}) = "
-          f"{ntok / dt:.0f} tok/s on "
+          f"{eng.ticks} ticks (K={args.ticks_per_sync}, "
+          f"attn={args.attn_impl}) = {ntok / dt:.0f} tok/s on "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
     if args.verdicts:
         for v in eng.nvm_verdicts():

@@ -1,9 +1,10 @@
 """GQA attention: flash-style chunked jnp implementation (XLA path) with
 causal/local masking, logit soft-capping, RoPE, and KV-cache prefill/decode.
 
-The Pallas TPU kernel in ``repro.kernels.flash_attention`` implements the
-same contract for the hardware target; ``repro.kernels.ref`` oracles match
-this module.
+The Pallas TPU kernels in ``repro.kernels.flash_attention`` (prefill
+shapes) and ``repro.kernels.decode_attention`` (the batched-serve decode
+tick, selected with ``impl="pallas_decode"``) implement the same contracts
+for the hardware target; ``repro.kernels.ref`` oracles match this module.
 """
 from __future__ import annotations
 
@@ -14,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models.common import ParamDef, ParamDefs, Params, rope, softcap
 
 NEG_INF = -2.0e38
@@ -298,11 +300,26 @@ def attention_block(
         # scalar position broadcast every write across all slots) and
         # attends its own prefix via the per-row mask in decode_attention.
         cp = jnp.asarray(cache_pos, jnp.int32)
-        rows = jnp.arange(B)
-        ck = cache["k"].at[rows, cp].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[rows, cp].set(v[:, 0].astype(cache["v"].dtype))
-        out = decode_attention(q, ck, cv, pos=cp, window=window,
-                               logit_cap=cfg.attn_softcap)
+        if impl == "pallas_decode":
+            # Pallas hot path: the KV scatter happens INSIDE the kernel
+            # launch (aliased cache blocks), replacing the separate
+            # per-layer .at[rows, cp].set pass; the jnp path below is
+            # the parity oracle (kernels run interpret=True on CPU).
+            win = jnp.asarray(0 if window is None else window, jnp.int32)
+            o, ck, cv = kernel_ops.decode_attention_fused(
+                q[:, 0], cache["k"], cache["v"],
+                k[:, 0].astype(cache["k"].dtype),
+                v[:, 0].astype(cache["v"].dtype),
+                cp, win, logit_cap=cfg.attn_softcap)
+            out = o[:, None]
+        else:
+            rows = jnp.arange(B)
+            ck = cache["k"].at[rows, cp].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cp].set(
+                v[:, 0].astype(cache["v"].dtype))
+            out = decode_attention(q, ck, cv, pos=cp, window=window,
+                                   logit_cap=cfg.attn_softcap)
         y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         return y, {"k": ck, "v": cv}
     if cache is not None and cache_pos is not None:
@@ -318,6 +335,11 @@ def attention_block(
     elif return_kv:
         new_cache = {"k": k, "v": v}  # prefill: engine pads to max_len
 
+    if impl == "pallas_decode":
+        raise ValueError(
+            "attn_impl='pallas_decode' is the batched-serve decode kernel "
+            "(per-row cache_pos vectors); use 'chunked' or 'naive' for "
+            "train/prefill/scalar-decode")
     if impl.startswith("chunked"):
         out = chunked_attention(
             q, k, v, causal=causal and kv_source is None, window=window,

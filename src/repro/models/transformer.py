@@ -245,6 +245,10 @@ def decoder_forward(
     position — the dry-run/training-eval convention) or a (B,) int32 vector
     of PER-ROW positions (the serve engine's continuous-batching tick, where
     every slot sits at a different depth; see attention.decode_attention).
+    With vector positions ``attn_impl="pallas_decode"`` selects the Pallas
+    blocked decode kernel with the fused in-launch KV scatter
+    (kernels.decode_attention; per-layer windows ride through the layer
+    scan as traced scalars); the default jnp path is its parity oracle.
     """
     B, S = tokens.shape
     x = _embed(cfg, params, tokens, vision_embeds)

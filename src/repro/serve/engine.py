@@ -107,10 +107,13 @@ class Engine:
     ``serve_records``/``nvm_verdicts``.
     """
 
+    DECODE_ATTN_IMPLS = ("xla", "pallas_decode")
+
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  eos_id: Optional[int] = None, seed: int = 0,
                  ticks_per_sync: int = 8, record_traffic: bool = True,
-                 prefill_attn_impl: str = "naive"):
+                 prefill_attn_impl: str = "naive",
+                 attn_impl: str = "xla"):
         if not model.supports_batched_serve:
             raise ValueError(
                 f"family {model.cfg.family!r} is not supported by the fused "
@@ -130,6 +133,15 @@ class Engine:
         # attention beats the flash-scan machinery there, and parity is on
         # greedy argmax, not bitwise logits
         self.prefill_attn_impl = prefill_attn_impl
+        # decode-tick attention: "xla" = jnp decode_attention (full-cache
+        # broadcast; the parity oracle), "pallas_decode" = blocked Pallas
+        # kernel with fused in-launch KV scatter (DESIGN.md §13)
+        if attn_impl not in self.DECODE_ATTN_IMPLS:
+            raise ValueError(
+                f"attn_impl {attn_impl!r} not in {self.DECODE_ATTN_IMPLS}")
+        self.attn_impl = attn_impl
+        self._decode_attn_impl = (
+            "pallas_decode" if attn_impl == "pallas_decode" else "chunked")
         self._window_jit = jax.jit(self._window, donate_argnums=(1, 2))
         self._prefill_jit = jax.jit(self._prefill_prog,
                                     donate_argnums=(1, 2))
@@ -162,7 +174,8 @@ class Engine:
             cache, last, pos, active, remaining, temps, key = carry
             safe_pos = jnp.clip(pos, 0, max_len - 1)
             logits, cache = self.model.decode_step(
-                params, cache, {"tokens": last[:, None]}, safe_pos)
+                params, cache, {"tokens": last[:, None]}, safe_pos,
+                attn_impl=self._decode_attn_impl)
             lg = logits[:, -1].astype(jnp.float32)
             key, sub = jax.random.split(key)
             tok = _sample_tokens(lg, temps, sub)
@@ -346,6 +359,7 @@ class Engine:
             recs.append({
                 "arch": arch, "mesh": mesh, "kind": "decode",
                 "shape": f"serve_decode_b{self.slots}_l{self.max_len}",
+                "attn_impl": self.attn_impl,
                 "ticks": self._counts["decode_ticks"],
                 "roofline": terms(rl, self.ticks_per_sync)})
         for P, rl in sorted(self._traffic["prefill"].items()):

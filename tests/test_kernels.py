@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.models import attention
 
 
 def _rand(key, shape, dtype):
@@ -35,6 +36,167 @@ def test_flash_attention_sweep(dtype, B, H, K, Sq, Skv, hd, causal, window,
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+def test_flash_attention_nondivisible_blocks_raise():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    k = _rand(ks[1], (1, 2, 128, 32), jnp.float32)
+    v = _rand(ks[2], (1, 2, 128, 32), jnp.float32)
+    q_bad = _rand(ks[0], (1, 2, 100, 32), jnp.float32)
+    with pytest.raises(ValueError, match=r"divisible blocks.*Sq=100.*bq=64"):
+        ops.flash_attention(q_bad, k, v, bq=64, bk=64)
+    q = _rand(ks[0], (1, 2, 128, 32), jnp.float32)
+    with pytest.raises(ValueError, match=r"Skv=128 % bk=48"):
+        ops.flash_attention(q, k, v, bq=64, bk=48)
+
+
+# ---------------- decode attention (serve hot path) ----------------
+
+
+def _decode_setup(key, B, H, K, L, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    q = _rand(ks[0], (B, H, hd), dtype)
+    k = _rand(ks[1], (B, L, K, hd), dtype)
+    v = _rand(ks[2], (B, L, K, hd), dtype)
+    nk = _rand(ks[3], (B, K, hd), dtype)
+    nv = _rand(ks[4], (B, K, hd), dtype)
+    # positions span the edge cases: empty prefix, mid-block, block
+    # boundary, last row of the cache
+    pos = (jnp.arange(B, dtype=jnp.int32) * (L // 2 + 3)) % L
+    pos = pos.at[0].set(0).at[-1].set(L - 1)
+    return q, k, v, nk, nv, pos
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,L,hd,window,cap,bk", [
+    (4, 4, 2, 128, 64, 0, 0.0, 32),       # GQA, global, multi-block
+    (3, 4, 4, 64, 32, 0, 0.0, 64),        # MHA, single block
+    (2, 4, 1, 128, 64, 24, 0.0, 32),      # MQA + local window
+    (4, 6, 2, 96, 32, 8, 50.0, 32),       # softcap + window, odd L
+    (5, 2, 2, 128, 64, 200, 30.0, 128),   # window > L == global
+])
+def test_decode_attention_sweep(dtype, B, H, K, L, hd, window, cap, bk):
+    q, k, v, _, _, pos = _decode_setup(jax.random.PRNGKey(4), B, H, K, L,
+                                       hd, dtype)
+    out = ops.decode_attention(q, k, v, pos, jnp.int32(window),
+                               logit_cap=cap, bk=bk)
+    want = ref.decode_attention_ref(q, k, v, pos, window, logit_cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bk", [32, 128])
+def test_decode_attention_fused_scatter(dtype, bk):
+    """Fused variant: output sees the new row; the cache write-back is
+    bitwise the jnp ``.at[rows, pos].set`` scatter (so rows past any
+    live slot's pos are untouched — the DESIGN.md §13 invariant)."""
+    B, H, K, L, hd = 4, 4, 2, 128, 64
+    q, k, v, nk, nv, pos = _decode_setup(jax.random.PRNGKey(5), B, H, K, L,
+                                         hd, dtype)
+    o, ck, cv = ops.decode_attention_fused(q, k, v, nk, nv, pos,
+                                           jnp.int32(0), bk=bk)
+    rows = jnp.arange(B)
+    k2 = k.at[rows, pos].set(nk)
+    v2 = v.at[rows, pos].set(nv)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(cv), np.asarray(v2))
+    # and the attention output already reflects the scattered row
+    o2 = ops.decode_attention(q, k2, v2, pos, jnp.int32(0), bk=bk)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# Window-semantics contract, pinned across BOTH decode implementations
+# (the Pallas kernel and the jnp path it replaces) with one shared
+# parametrization — the serve engine may run either.
+
+
+def _decode(impl, q, k, v, pos, window, cap=0.0):
+    if impl == "pallas":
+        w = jnp.asarray(0 if window is None else window, jnp.int32)
+        return ops.decode_attention(q, k, v, pos, w, logit_cap=cap, bk=32)
+    return attention.decode_attention(q[:, None], k, v, pos=pos,
+                                      window=window, logit_cap=cap)[:, 0]
+
+
+DECODE_IMPLS = ["pallas", "jnp"]
+
+
+def _close(a, b):
+    # traced-vs-static take different XLA programs; bitwise equality is
+    # not guaranteed across compilations, so compare at f32-tight tol
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", DECODE_IMPLS)
+@pytest.mark.parametrize("wval", [0, -5])
+def test_decode_traced_nonpositive_window_is_global(impl, wval):
+    """A traced per-layer scalar window <= 0 is the global escape hatch:
+    alt local/global stacks scan one int32 per layer through the same
+    compiled decode step."""
+    q, k, v, _, _, pos = _decode_setup(jax.random.PRNGKey(6), 4, 4, 2, 64, 32)
+    traced = jax.jit(
+        lambda w: _decode(impl, q, k, v, pos, w))(jnp.int32(wval))
+    _close(traced, _decode(impl, q, k, v, pos, 0))
+
+
+@pytest.mark.parametrize("impl", DECODE_IMPLS)
+def test_decode_window_none_equals_zero(impl):
+    q, k, v, _, _, pos = _decode_setup(jax.random.PRNGKey(7), 3, 4, 2, 64, 32)
+    _close(_decode(impl, q, k, v, pos, None),
+           _decode(impl, q, k, v, pos, 0))
+
+
+@pytest.mark.parametrize("impl", DECODE_IMPLS)
+@pytest.mark.parametrize("window", [0, 16])
+def test_decode_traced_window_matches_static(impl, window):
+    q, k, v, _, _, pos = _decode_setup(jax.random.PRNGKey(8), 4, 4, 2, 64, 32)
+    traced = jax.jit(
+        lambda w: _decode(impl, q, k, v, pos, w))(jnp.int32(window))
+    _close(traced, _decode(impl, q, k, v, pos, window))
+
+
+@pytest.mark.parametrize("window", [0, 12])
+def test_decode_pallas_matches_jnp_path(window):
+    """The two engine-selectable implementations agree on the same
+    inputs (the parity the serve engine's attn_impl flag rests on)."""
+    q, k, v, _, _, pos = _decode_setup(jax.random.PRNGKey(11), 4, 4, 2,
+                                       64, 32)
+    _close(_decode("pallas", q, k, v, pos, window, cap=30.0),
+           _decode("jnp", q, k, v, pos, window, cap=30.0))
+
+
+@pytest.mark.parametrize("impl", DECODE_IMPLS)
+def test_decode_pos_mask_slot_isolation(impl):
+    """The pos mask is the slot-isolation boundary: garbage past a row's
+    own position — and ANY change to other slots' rows — must leave the
+    row's output bit-identical."""
+    B, H, K, L, hd = 4, 4, 2, 64, 32
+    q, k, v, _, _, pos = _decode_setup(jax.random.PRNGKey(9), B, H, K, L, hd)
+    base = _decode(impl, q, k, v, pos, 0)
+
+    # 1) huge-magnitude garbage in rows past each slot's pos
+    k_idx = jnp.arange(L)
+    past = (k_idx[None, :] > pos[:, None])[..., None, None]
+    kg = jnp.where(past, 1e9, k)
+    vg = jnp.where(past, -1e9, v)
+    np.testing.assert_array_equal(
+        np.asarray(_decode(impl, q, kg, vg, pos, 0)), np.asarray(base))
+
+    # 2) rewriting slot 0's entire cache row + pos leaves slots 1..B-1
+    # bit-identical (per-row independence)
+    k3 = k.at[0].set(_rand(jax.random.PRNGKey(10), (L, K, hd), k.dtype))
+    pos3 = pos.at[0].set(L - 1)
+    other = _decode(impl, q, k3, v, pos3, 0)
+    np.testing.assert_array_equal(np.asarray(other[1:]),
+                                  np.asarray(base[1:]))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -78,8 +78,11 @@ def test_unsupported_families_are_rejected(mp):
 @pytest.mark.parametrize("make", [
     lambda m, p: Engine(m, p, slots=SLOTS, max_len=MAX_LEN,
                         ticks_per_sync=2, record_traffic=False),
+    lambda m, p: Engine(m, p, slots=SLOTS, max_len=MAX_LEN,
+                        ticks_per_sync=2, record_traffic=False,
+                        attn_impl="pallas_decode"),
     lambda m, p: EngineReference(m, p, slots=SLOTS, max_len=MAX_LEN),
-], ids=["fused", "reference"])
+], ids=["fused", "fused-pallas", "reference"])
 def test_prefill_does_not_touch_other_slots(mp, make):
     """Prefill B while A is mid-decode: A's cache rows and final output
     must be exactly what they would have been with A running alone."""
@@ -154,6 +157,40 @@ def test_mixed_workload_greedy_parity_vs_reference(mp):
                      eos_id=eos, ticks_per_sync=K, record_traffic=False)
         out = run_staggered(eng, staggered_groups(_workload(seed=5), 2))
         assert out == out_ref, f"K={K} diverged from reference"
+
+
+def test_mixed_workload_greedy_parity_pallas_engine(mp):
+    """The Pallas decode kernel (fused KV scatter, interpret mode on CPU)
+    behind attn_impl='pallas_decode': greedy outputs must match the
+    reference per-tick engine token for token over staggered arrivals,
+    uneven lengths, and eos exits, at K=1 and K=4."""
+    model, params = mp
+    ref = EngineReference(model, params, slots=SLOTS, max_len=MAX_LEN)
+    probe_out = run_staggered(ref, staggered_groups(_workload(seed=5), 2))
+    eos = next(t for o in probe_out.values() for t in o[1:])
+
+    ref = EngineReference(model, params, slots=SLOTS, max_len=MAX_LEN,
+                          eos_id=eos)
+    out_ref = run_staggered(ref, staggered_groups(_workload(seed=5), 2))
+    assert any(o[-1] == eos and len(o) > 1 for o in out_ref.values())
+    for K in (1, 4):
+        eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                     eos_id=eos, ticks_per_sync=K, record_traffic=False,
+                     attn_impl="pallas_decode")
+        out = run_staggered(eng, staggered_groups(_workload(seed=5), 2))
+        assert out == out_ref, f"pallas K={K} diverged from reference"
+
+
+def test_attn_impl_validated_and_recorded(mp):
+    model, params = mp
+    with pytest.raises(ValueError, match="attn_impl"):
+        Engine(model, params, slots=1, max_len=8, attn_impl="triton")
+    eng = Engine(model, params, slots=2, max_len=16, ticks_per_sync=2,
+                 record_traffic=True, attn_impl="pallas_decode")
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=3))
+    eng.run()
+    decode = next(r for r in eng.serve_records() if r["kind"] == "decode")
+    assert decode["attn_impl"] == "pallas_decode"
 
 
 def test_outputs_are_schedule_independent(mp):
