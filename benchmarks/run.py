@@ -33,6 +33,10 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--gate", action="store_true",
+                    help="after the selected benchmarks, run the "
+                         "benchmarks.gate regression ratchet over the "
+                         "BENCH_*.json histories")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
@@ -45,6 +49,10 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(mod_name)
+    if args.gate and not failed:
+        from benchmarks.gate import main as gate_main
+        if gate_main([]) != 0:
+            failed.append("gate")
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

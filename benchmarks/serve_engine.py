@@ -1,4 +1,4 @@
-"""Serve-engine speedup: fused device-resident windows vs the seed path.
+"""Serve-engine speedup + SLO latency: fused windows vs the seed path.
 
 Runs the same mixed workload (staggered arrivals, uneven prompt/output
 lengths, all-greedy for parity) through the fused ``Engine`` — once per
@@ -7,10 +7,20 @@ blocked kernel with fused KV scatter, interpret mode on CPU) — and
 through ``EngineReference`` (the seed per-tick path: per-token prefill,
 one host round-trip per tick).  Each leg verifies token-for-token greedy
 parity against the reference and appends its OWN record to
-``BENCH_serve.json`` with an ``attn_impl`` field, so a future regression
-is attributable to the kernel or to the engine.  Floors enforced here
-(and in CI): parity must hold and the warm speedup must be >= 10x on
-every leg.
+``BENCH_serve.json`` with ``leg``/``attn_impl`` fields, so a future
+regression is attributable to the kernel or to the engine.  Every timing
+loop blocks on the engine's device state before reading the clock
+(``clock: "blocking"`` in the records — benchmarks/gate.py ratchets the
+per-leg speedups against history).  Floors enforced here (and in CI):
+parity must hold and the warm speedup must be >= 10x on every leg.
+
+A final ``poisson_burst`` leg drives the warm xla engine with the real
+traffic generator — Poisson arrivals with sinusoidal burst modulation,
+lognormal heavy-tailed prompt/output lengths, admission by arrival tick
+— and lands TTFT / TPOT / end-to-end p50/p95/p99 percentiles (wall-clock
+AND tick-domain, serve/telemetry.py) in the ``latest`` record, plus a
+scheduling-independence parity check (bursty arrivals must not change
+greedy outputs).
 
 The xla-leg record also carries the engine's serve-mode NVM verdicts —
 the decode-tick SRAM vs STT/SOT energy/EDP ratios from the measured
@@ -27,7 +37,8 @@ import jax
 from benchmarks.common import append_bench_record, emit
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serve import (Engine, EngineReference, mixed_requests,
+from repro.serve import (Engine, EngineReference, latency_summary,
+                         mixed_requests, poisson_requests, run_arrivals,
                          run_staggered, staggered_groups)
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
@@ -42,6 +53,14 @@ MAX_NEW = (4, 10)            # these one decode_step call per prompt token
 SPEEDUP_FLOOR = 10.0
 ATTN_IMPLS = ("xla", "pallas_decode")
 
+# poisson_burst leg: heavy-tailed lengths under a bursty arrival process
+N_TRAFFIC = 32
+ARRIVAL_RATE = 0.5           # mean arrivals per decode tick
+BURST_AMP = 0.6
+BURST_PERIOD = 48.0
+TRAFFIC_PROMPTS = (2, 24)
+TRAFFIC_NEW = (1, 12)
+
 
 def _workload(seed: int):
     return mixed_requests(N_REQUESTS, seed=seed, vocab=512,
@@ -49,7 +68,83 @@ def _workload(seed: int):
 
 
 def _drive(engine, seed: int):
-    return run_staggered(engine, staggered_groups(_workload(seed), SLOTS))
+    out = run_staggered(engine, staggered_groups(_workload(seed), SLOTS))
+    _block(engine)
+    return out
+
+
+def _block(engine):
+    """Block on the engine's device state before stopping any timer —
+    outputs are host ints already, but this pins the discipline even if
+    a future engine keeps results device-side past the drain."""
+    jax.block_until_ready(engine.cache)
+    state = getattr(engine, "_state", None)
+    if state is not None:
+        jax.block_until_ready(state)
+
+
+def _traffic(seed: int):
+    return poisson_requests(
+        N_TRAFFIC, seed=seed, vocab=512, arrival_rate=ARRIVAL_RATE,
+        burst_amp=BURST_AMP, burst_period=BURST_PERIOD,
+        prompt_bounds=TRAFFIC_PROMPTS, new_bounds=TRAFFIC_NEW)
+
+
+def _base_record(**extra):
+    rec = {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "grid": (f"{N_REQUESTS} reqs x prompts {PROMPT_LENS} x new "
+                 f"{MAX_NEW} on {SLOTS} slots, max_len {MAX_LEN}, "
+                 f"K={TICKS_PER_SYNC} ({ARCH} reduced)"),
+    }
+    rec.update(extra)
+    return rec
+
+
+def _latency_leg(eng, failures):
+    """Bursty-traffic latency percentiles on the warm xla engine."""
+    eng.reset()
+    reqs = _traffic(seed=2)
+    t0 = time.perf_counter()
+    out = run_arrivals(eng, reqs)
+    _block(eng)
+    burst_s = time.perf_counter() - t0
+    summary = latency_summary(reqs)
+
+    # scheduling independence: the same prompts all at once must decode
+    # to the same greedy tokens the bursty schedule produced
+    eng.reset()
+    out_flat = run_staggered(eng, [list(_traffic(seed=2))])
+    bursty_parity = out == out_flat
+
+    record = _base_record(
+        grid=(f"{N_TRAFFIC} poisson reqs, rate {ARRIVAL_RATE}/tick, "
+              f"burst amp {BURST_AMP} period {BURST_PERIOD}, prompts "
+              f"{TRAFFIC_PROMPTS} new {TRAFFIC_NEW} on {SLOTS} slots, "
+              f"K={TICKS_PER_SYNC} ({ARCH} reduced)"),
+        leg="poisson_burst",
+        attn_impl=eng.attn_impl,
+        arrival_rate=ARRIVAL_RATE,
+        burst_amp=BURST_AMP,
+        burst_period=BURST_PERIOD,
+        burst_wall_s=burst_s,
+        engine_ticks=eng.ticks,
+        latency=summary,
+        bursty_parity=bursty_parity,
+    )
+    append_bench_record(BENCH_PATH, record)
+    lat = summary["ticks"]["e2e"]
+    emit("serve_latency_poisson", burst_s * 1e6,
+         f"ttft p50 {summary['ticks']['ttft']['p50']:.1f}t p99 "
+         f"{summary['ticks']['ttft']['p99']:.1f}t | e2e p50 "
+         f"{lat['p50']:.1f}t p99 {lat['p99']:.1f}t | parity="
+         f"{'ok' if bursty_parity else 'MISMATCH'} -> {BENCH_PATH.name}")
+    if not bursty_parity:
+        failures.append("poisson_burst: bursty arrival schedule changed "
+                        "greedy outputs (scheduling independence broken)")
+    if summary["completed"] != N_TRAFFIC or not summary["wall"]:
+        failures.append("poisson_burst: latency percentiles empty or "
+                        f"incomplete ({summary['completed']}/{N_TRAFFIC})")
 
 
 def run():
@@ -63,17 +158,20 @@ def run():
     for _ in range(2):
         ref.reset()
         t0 = time.perf_counter()
-        out_ref = _drive(ref, seed=1)
+        out_ref = _drive(ref, seed=1)         # _drive blocks before return
         legacy_s = min(legacy_s, time.perf_counter() - t0)
     tokens = sum(len(o) for o in out_ref.values())
     ref_tps = tokens / legacy_s
 
     failures = []
+    xla_engine = None
     for attn_impl in ATTN_IMPLS:
         eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
                      ticks_per_sync=TICKS_PER_SYNC,
                      record_traffic=(attn_impl == "xla"),
                      attn_impl=attn_impl)
+        if attn_impl == "xla":
+            xla_engine = eng
         t0 = time.perf_counter()
         _drive(eng, seed=0)                   # cold: compiles + traffic
         cold_s = time.perf_counter() - t0
@@ -93,22 +191,19 @@ def run():
                       "edp_ratio": v.edp_ratio}
             for v in eng.nvm_verdicts()}
 
-        record = {
-            "timestamp": datetime.now(timezone.utc).isoformat(),
-            "grid": (f"{N_REQUESTS} reqs x prompts {PROMPT_LENS} x new "
-                     f"{MAX_NEW} on {SLOTS} slots, max_len {MAX_LEN}, "
-                     f"K={TICKS_PER_SYNC} ({ARCH} reduced)"),
-            "attn_impl": attn_impl,
-            "engine_s": engine_s,
-            "engine_cold_s": cold_s,
-            "legacy_per_tick_s": legacy_s,
-            "warm_tokens_per_s": eng_tps,
-            "reference_tokens_per_s": ref_tps,
-            "speedup": speedup,
-            "speedup_floor": SPEEDUP_FLOOR,
-            "greedy_parity": parity,
-            "nvm_verdicts": verdicts,
-        }
+        record = _base_record(
+            leg=attn_impl,
+            attn_impl=attn_impl,
+            engine_s=engine_s,
+            engine_cold_s=cold_s,
+            legacy_per_tick_s=legacy_s,
+            warm_tokens_per_s=eng_tps,
+            reference_tokens_per_s=ref_tps,
+            speedup=speedup,
+            speedup_floor=SPEEDUP_FLOOR,
+            greedy_parity=parity,
+            nvm_verdicts=verdicts,
+        )
         append_bench_record(BENCH_PATH, record)
 
         emit(f"serve_engine_{attn_impl}", engine_s * 1e6,
@@ -123,6 +218,10 @@ def run():
             failures.append(
                 f"{attn_impl}: serve engine speedup {speedup:.1f}x below "
                 f"the {SPEEDUP_FLOOR:.0f}x floor")
+
+    # appended last so BENCH_serve.json's ``latest`` carries the SLO
+    # percentiles for the bursty workload
+    _latency_leg(xla_engine, failures)
     if failures:
         raise AssertionError("; ".join(failures))
 

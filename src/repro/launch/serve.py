@@ -3,12 +3,25 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
         --no-reduced --ticks-per-sync 16 --temperature 0.7
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+        --arrival-rate 0.5 --burst-amp 0.6 --trace-out /tmp/serve.json
 
 ``--reduced`` defaults on (CPU-runnable smoke config) and — unlike the
 seed's ``action="store_true", default=True``, which could never be turned
-off — is disabled with ``--no-reduced`` for full-size configs.  After the
-run the launcher prints the engine's serve-mode NVM verdicts: SRAM vs
-STT/SOT-MRAM energy/EDP on the measured decode-tick and prefill traffic.
+off — is disabled with ``--no-reduced`` for full-size configs.
+
+``--arrival-rate > 0`` switches from fixed staggered groups to the real
+traffic generator (DESIGN.md §14): Poisson arrivals in the tick domain
+(optionally burst-modulated via ``--burst-amp``/``--burst-period``),
+lognormal heavy-tailed prompt/output lengths, admission by arrival time.
+After an arrival-driven run the launcher prints TTFT/TPOT/end-to-end
+p50/p95/p99 (tick-domain and wall-clock) and FAILS if the percentiles
+are empty or any request went unserved — the CI smoke leans on that.
+``--trace-out PATH`` attaches a telemetry tracer and writes a
+chrome://tracing JSON of the engine's prefill calls, decode windows, and
+host drains.  After every run the launcher prints the engine's
+serve-mode NVM verdicts: SRAM vs STT/SOT-MRAM energy/EDP on the measured
+decode-tick and prefill traffic.
 """
 import argparse
 import time
@@ -18,10 +31,21 @@ import jax
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.launch.mesh import mesh_context
 from repro.models import build_model
-from repro.serve import Engine, mixed_requests, run_staggered, \
-    staggered_groups
+from repro.serve import (Engine, Tracer, latency_summary, mixed_requests,
+                         poisson_requests, run_arrivals, run_staggered,
+                         staggered_groups)
 from repro.sharding import default_rules, tree_shardings
 from repro.train.elastic import remesh
+
+
+def _print_latency(summary: dict) -> None:
+    print(f"latency over {summary['completed']}/{summary['n']} requests "
+          f"({summary['tokens']} tokens):")
+    for domain, unit, scale in (("ticks", "t", 1.0), ("wall", "ms", 1e3)):
+        for metric, stats in sorted(summary[domain].items()):
+            line = " ".join(f"{k} {v * scale:.2f}{unit}"
+                            for k, v in stats.items() if k != "max")
+            print(f"  {domain:5s} {metric:7s} {line}")
 
 
 def main():
@@ -43,6 +67,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for every 2nd request "
                          "(0 = all greedy)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean Poisson arrivals per decode tick; > 0 "
+                         "switches to arrival-driven traffic with "
+                         "heavy-tailed lengths and SLO latency output")
+    ap.add_argument("--burst-amp", type=float, default=0.0,
+                    help="sinusoidal burst modulation amplitude in [0, 1] "
+                         "for the arrival rate")
+    ap.add_argument("--burst-period", type=float, default=64.0,
+                    help="burst modulation period in ticks")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a chrome://tracing JSON of engine windows "
+                         "(prefill / decode / host drain) to this path")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verdicts", action=argparse.BooleanOptionalAction,
                     default=True, help="print serve-mode NVM verdicts")
@@ -55,6 +91,7 @@ def main():
     model = build_model(cfg, max_seq=args.max_len)
     rules = default_rules(fsdp=False)  # serving: params over model axis only
 
+    tracer = Tracer(name=f"serve-{args.arch}") if args.trace_out else None
     with mesh_context(mesh):
         params = model.init(jax.random.PRNGKey(0))
         p_sh = tree_shardings(model.param_axes(), params, mesh, rules)
@@ -62,21 +99,46 @@ def main():
         eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
                      seed=args.seed, ticks_per_sync=args.ticks_per_sync,
                      record_traffic=args.verdicts,
-                     attn_impl=args.attn_impl)
-        reqs = mixed_requests(
-            args.requests, seed=args.seed, vocab=cfg.vocab_size,
-            prompt_lens=(2, max(2, args.max_len // 4)),
-            max_new=(2, max(2, args.max_len // 8)),
-            temperature=args.temperature,
-            temperature_every=2 if args.temperature > 0 else 0)
+                     attn_impl=args.attn_impl, tracer=tracer)
+        temp_every = 2 if args.temperature > 0 else 0
         t0 = time.time()
-        outputs = run_staggered(eng, staggered_groups(reqs, args.slots))
+        if args.arrival_rate > 0:
+            reqs = poisson_requests(
+                args.requests, seed=args.seed, vocab=cfg.vocab_size,
+                arrival_rate=args.arrival_rate, burst_amp=args.burst_amp,
+                burst_period=args.burst_period,
+                prompt_bounds=(2, max(2, args.max_len // 4)),
+                new_bounds=(1, max(2, args.max_len // 8)),
+                temperature=args.temperature,
+                temperature_every=temp_every)
+            outputs = run_arrivals(eng, reqs)
+        else:
+            reqs = mixed_requests(
+                args.requests, seed=args.seed, vocab=cfg.vocab_size,
+                prompt_lens=(2, max(2, args.max_len // 4)),
+                max_new=(2, max(2, args.max_len // 8)),
+                temperature=args.temperature,
+                temperature_every=temp_every)
+            outputs = run_staggered(eng, staggered_groups(reqs, args.slots))
+        jax.block_until_ready(eng.cache)   # timings are blocking-clock
         dt = time.time() - t0
     ntok = sum(len(o) for o in outputs.values())
     print(f"served {args.requests} requests / {ntok} tokens in "
           f"{eng.ticks} ticks (K={args.ticks_per_sync}, "
           f"attn={args.attn_impl}) = {ntok / dt:.0f} tok/s on "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    if args.arrival_rate > 0:
+        summary = latency_summary(reqs)
+        _print_latency(summary)
+        if (summary["completed"] != args.requests or not summary["wall"]
+                or not summary["ticks"]):
+            raise SystemExit(
+                f"latency percentiles empty or incomplete: "
+                f"{summary['completed']}/{args.requests} requests finished")
+    if tracer is not None:
+        path = tracer.save(args.trace_out)
+        print(f"chrome trace ({len(tracer.to_chrome_trace()['traceEvents'])}"
+              f" events) -> {path}")
     if args.verdicts:
         for v in eng.nvm_verdicts():
             print(f"  {v.shape}: energy vs SRAM "

@@ -1,7 +1,16 @@
 from repro.serve.engine import (Engine, EngineReference, Request,
                                 engine_reference)
-from repro.serve.workload import (mixed_requests, run_staggered,
+from repro.serve.telemetry import (Tracer, latency_summary, percentile,
+                                   request_latency, summarize,
+                                   validate_chrome_trace)
+from repro.serve.workload import (lognormal_lengths, mixed_requests,
+                                  poisson_arrivals, poisson_requests,
+                                  run_arrivals, run_staggered,
                                   staggered_groups)
 
 __all__ = ["Engine", "EngineReference", "Request", "engine_reference",
-           "mixed_requests", "run_staggered", "staggered_groups"]
+           "Tracer", "latency_summary", "percentile", "request_latency",
+           "summarize", "validate_chrome_trace",
+           "lognormal_lengths", "mixed_requests", "poisson_arrivals",
+           "poisson_requests", "run_arrivals", "run_staggered",
+           "staggered_groups"]

@@ -36,8 +36,10 @@ host round-trip per tick) as the correctness oracle and benchmark baseline.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +50,35 @@ from repro.models.api import Model
 
 @dataclasses.dataclass
 class Request:
+    """One serve request, carrying its own latency record.
+
+    Tick-domain semantics (canonical for BOTH engines; parity-enforced in
+    tests/test_serve_engine.py so tick-domain TTFT/TPOT is comparable
+    across ``Engine`` and ``EngineReference``):
+
+      * ``engine.ticks`` counts completed DECODE ticks since reset.
+        Admission (prefill) happens at host sync points and does not
+        advance the tick clock.
+      * A request admitted at tick ``T`` gets ``admit_tick = T``.  Its
+        prefill-sampled first token t0 is emitted at tick ``T`` as well
+        (``first_token_tick = T``): the admission sync point and the
+        window's first decode tick share a tick, exactly as in the seed
+        per-tick ``step()``.
+      * Decode token ``i`` (0-indexed in ``output``, ``i >= 1``) is
+        emitted at tick ``T + i - 1``, so ``done_tick`` — the tick of the
+        FINAL emitted token — is ``T + len(output) - 2`` for multi-token
+        outputs and ``T`` for a request that terminates at prefill
+        (``max_new_tokens == 1``, immediate eos, or a full cache).
+
+    Wall-clock stamps (``*_time``, ``time.perf_counter`` seconds) are
+    taken when the host actually OBSERVES the event: ``first_token_time``
+    when the admission prefill's tokens land on the host, ``done_time``
+    at the drain that surfaces the final token — so wall-clock TTFT/TPOT
+    include the K-tick drain cadence a client would really see.
+    ``arrival`` is the intended arrival time in ticks for traffic-
+    generator workloads (``serve/workload.py``); tick-domain latencies
+    are measured from it when set, else from ``submit_tick``.
+    """
     uid: int
     prompt: List[int]
     max_new_tokens: int
@@ -55,6 +86,25 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     done_tick: Optional[int] = None   # engine tick of the final token
+    arrival: Optional[float] = None   # intended arrival (ticks; traffic gen)
+    submit_tick: Optional[int] = None
+    submit_time: Optional[float] = None
+    admit_tick: Optional[int] = None
+    admit_time: Optional[float] = None
+    first_token_tick: Optional[int] = None
+    first_token_time: Optional[float] = None
+    done_time: Optional[float] = None
+
+    def _mark_admitted(self, tick: int, now: float) -> None:
+        """Stamp admission == first-token emission (see class docstring);
+        both engines route through here so the tick domains cannot drift."""
+        self.admit_tick = self.first_token_tick = tick
+        self.admit_time = self.first_token_time = now
+
+    def _mark_done(self, tick: int, now: float) -> None:
+        self.done = True
+        self.done_tick = tick
+        self.done_time = now
 
 
 def _sample_tokens(logits: jax.Array, temps: jax.Array,
@@ -84,16 +134,33 @@ def _check_request(req: Request, max_len: int) -> None:
         raise ValueError(f"request {req.uid}: max_new_tokens must be >= 1")
 
 
-def _drain_until_done(engine, max_ticks: int) -> None:
+def _unfinished(engine) -> int:
+    """Requests not yet done: still queued or still occupying a slot."""
+    return len(engine._queue) + sum(
+        r is not None for r in engine.slot_req)
+
+
+def _drain_until_done(engine, max_ticks: int) -> int:
     """Shared run loop: step until queue + slots are empty or the tick
-    budget is spent (both engines share exit semantics by construction)."""
+    budget is spent (both engines share exit semantics by construction).
+
+    The budget is K-granular and NEVER overshoots: a window only runs if
+    its full ``ticks_per_sync`` ticks fit inside ``max_ticks`` (the seed
+    checked only at window boundaries, so ``run(max_ticks)`` could spend
+    up to ``ticks_per_sync - 1`` extra ticks and then return silently
+    with unfinished work).  When K does not divide ``max_ticks`` the last
+    partial window is NOT run — at most ``floor(max_ticks / K) * K``
+    ticks are spent.  Returns the number of unfinished requests.
+    """
     start = engine.ticks
+    k = engine.ticks_per_sync
     while engine._queue or any(r is not None for r in engine.slot_req):
-        if engine.ticks - start >= max_ticks:
+        if engine.ticks - start + k > max_ticks:
             break
         n = engine.step()
         if n == 0 and not engine._queue:
             break
+    return _unfinished(engine)
 
 
 class Engine:
@@ -113,7 +180,7 @@ class Engine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  ticks_per_sync: int = 8, record_traffic: bool = True,
                  prefill_attn_impl: str = "naive",
-                 attn_impl: str = "xla"):
+                 attn_impl: str = "xla", tracer=None):
         if not model.supports_batched_serve:
             raise ValueError(
                 f"family {model.cfg.family!r} is not supported by the fused "
@@ -140,6 +207,9 @@ class Engine:
             raise ValueError(
                 f"attn_impl {attn_impl!r} not in {self.DECODE_ATTN_IMPLS}")
         self.attn_impl = attn_impl
+        # optional serve.telemetry.Tracer: records prefill / decode-window
+        # / host-drain spans for chrome://tracing export (DESIGN.md §14)
+        self.tracer = tracer
         self._decode_attn_impl = (
             "pallas_decode" if attn_impl == "pallas_decode" else "chunked")
         self._window_jit = jax.jit(self._window, donate_argnums=(1, 2))
@@ -154,7 +224,7 @@ class Engine:
         self.cache = self.model.init_cache(self.slots, self.max_len)
         self.key = jax.random.PRNGKey(self.seed if seed is None else seed)
         self.slot_req: List[Optional[Request]] = [None] * self.slots
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = collections.deque()
         self._state = {            # device-resident (slots,) slot state
             "last": jnp.zeros(self.slots, jnp.int32),
             "pos": jnp.zeros(self.slots, jnp.int32),
@@ -263,6 +333,8 @@ class Engine:
     # ---- admission ------------------------------------------------------
     def submit(self, req: Request) -> None:
         _check_request(req, self.max_len)
+        req.submit_tick = self.ticks
+        req.submit_time = time.perf_counter()
         self._queue.append(req)
 
     def _admit(self) -> int:
@@ -271,7 +343,7 @@ class Engine:
         take = min(len(free), len(self._queue))
         if take == 0:
             return 0
-        pairs = [(free[i], self._queue.pop(0)) for i in range(take)]
+        pairs = [(free[i], self._queue.popleft()) for i in range(take)]
         P = min(self.max_len,
                 _next_pow2(max(len(r.prompt) for _, r in pairs)))
         tokens = np.zeros((self.slots, P), np.int32)
@@ -291,16 +363,23 @@ class Engine:
         if P not in self._traffic["prefill"]:
             self._traffic["prefill"][P] = self._analyze(
                 self._prefill_jit, *args)
+        t_launch = time.perf_counter()
         self.cache, self._state, self.key, t0, done0 = \
             self._prefill_jit(*args)
         self._counts["prefill_calls"][P] = \
             self._counts["prefill_calls"].get(P, 0) + 1
         t0, done0 = np.asarray(t0), np.asarray(done0)
+        now = time.perf_counter()   # t0/done0 observed on the host
+        if self.tracer is not None:
+            self.tracer.span(f"prefill P={P}", "prefill", t_launch, now,
+                             args={"tick": self.ticks, "admitted": take,
+                                   "padded_len": P})
         for s, r in pairs:
             self.slot_req[s] = r
+            r._mark_admitted(self.ticks, now)
             r.output.append(int(t0[s]))
             if done0[s]:
-                r.done, r.done_tick = True, self.ticks
+                r._mark_done(self.ticks, now)
                 self.slot_req[s] = None
         return take
 
@@ -316,9 +395,11 @@ class Engine:
             self._traffic["decode"] = self._analyze(
                 self._window_jit, self.params, self.cache, self._state,
                 self.key)
+        t_launch = time.perf_counter()
         self.cache, self._state, self.key, toks, fins = self._window_jit(
             self.params, self.cache, self._state, self.key)
         toks, fins = np.asarray(toks), np.asarray(fins)   # ONE host sync
+        now = time.perf_counter()   # window results observed on the host
         self._counts["decode_ticks"] += self.ticks_per_sync
         for t in range(self.ticks_per_sync):
             for s in range(self.slots):
@@ -327,13 +408,28 @@ class Engine:
                     continue
                 r.output.append(int(toks[t, s]))
                 if fins[t, s]:
-                    r.done, r.done_tick = True, self.ticks + t
+                    # tick domain keeps the in-window position; the wall
+                    # clock is the drain that surfaced the token (Request
+                    # docstring)
+                    r._mark_done(self.ticks + t, now)
                     self.slot_req[s] = None
+        if self.tracer is not None:
+            t_end = time.perf_counter()
+            self.tracer.span(
+                "decode_window", "decode", t_launch, now,
+                args={"tick": self.ticks, "K": self.ticks_per_sync,
+                      "active": n_active})
+            self.tracer.span("host_drain", "host", now, t_end,
+                             args={"tick": self.ticks})
+            self.tracer.counter("active_slots", {"active": n_active},
+                                t_launch)
         self.ticks += self.ticks_per_sync
         return n_active
 
-    def run(self, max_ticks: int = 10_000) -> None:
-        _drain_until_done(self, max_ticks)
+    def run(self, max_ticks: int = 10_000) -> int:
+        """Run to completion within a K-granular tick budget; returns the
+        number of unfinished requests (0 when everything completed)."""
+        return _drain_until_done(self, max_ticks)
 
     # ---- serve-mode NVM verdicts ---------------------------------------
     def serve_records(self, mesh: Optional[str] = None) -> List[dict]:
@@ -395,6 +491,8 @@ class EngineReference:
     tests/test_serve_engine.py and benchmarks/serve_engine.py.
     """
 
+    ticks_per_sync = 1   # per-tick engine: every step is its own window
+
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  eos_id: Optional[int] = None, seed: int = 0):
         if not model.supports_batched_serve:
@@ -420,7 +518,7 @@ class EngineReference:
         self.cache = self.model.init_cache(self.slots, self.max_len)
         self.key = jax.random.PRNGKey(self.seed if seed is None else seed)
         self.slot_req: List[Optional[Request]] = [None] * self.slots
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = collections.deque()
         self._last = np.zeros(self.slots, np.int32)
         self._pos = np.zeros(self.slots, np.int32)
         self._active = np.zeros(self.slots, bool)
@@ -431,12 +529,14 @@ class EngineReference:
     # ---- admission ------------------------------------------------------
     def submit(self, req: Request) -> None:
         _check_request(req, self.max_len)
+        req.submit_tick = self.ticks
+        req.submit_time = time.perf_counter()
         self._queue.append(req)
 
     def _admit(self) -> None:
         for i in range(self.slots):
             if self.slot_req[i] is None and self._queue:
-                self._prefill(i, self._queue.pop(0))
+                self._prefill(i, self._queue.popleft())
 
     def _sample(self, logits_row: np.ndarray, temp: float) -> int:
         if temp > 0:
@@ -468,6 +568,7 @@ class EngineReference:
             lg = logits
         t0 = self._sample(np.asarray(lg)[slot, -1].astype(np.float32),
                           req.temperature)
+        req._mark_admitted(self.ticks, time.perf_counter())
         req.output.append(t0)
         self._last[slot] = t0
         self._pos[slot] = len(req.prompt)
@@ -477,7 +578,7 @@ class EngineReference:
                 or (self.eos_id is not None and t0 == self.eos_id)
                 or self._pos[slot] >= self.max_len)
         if done:
-            req.done, req.done_tick = True, self.ticks
+            req._mark_done(self.ticks, time.perf_counter())
             self.slot_req[slot] = None
             self._active[slot] = False
         else:
@@ -506,14 +607,16 @@ class EngineReference:
                     or (self.eos_id is not None and tok == self.eos_id)
                     or self._pos[s] >= self.max_len)
             if done:
-                r.done, r.done_tick = True, self.ticks
+                r._mark_done(self.ticks, time.perf_counter())
                 self.slot_req[s] = None
                 self._active[s] = False
         self.ticks += 1
         return len(active)
 
-    def run(self, max_ticks: int = 10_000) -> None:
-        _drain_until_done(self, max_ticks)
+    def run(self, max_ticks: int = 10_000) -> int:
+        """Run to completion within the tick budget; returns the number of
+        unfinished requests (0 when everything completed)."""
+        return _drain_until_done(self, max_ticks)
 
 
 # The seed engine's per-tick path lives on under this name (parity oracle

@@ -1,0 +1,164 @@
+"""Bench clock + BENCH-file durability + the CI regression ratchet.
+
+Covers the three serve-clock accounting fixes (DESIGN.md §14):
+  * ``timed`` must block on async JAX outputs before reading the clock
+    (a sleepy dummy computation must not time as ~0);
+  * ``append_bench_record`` must be atomic and must preserve a
+    malformed existing file to a ``.corrupt`` sidecar;
+  * ``benchmarks.gate`` must fail on a synthetic regression, ratchet
+    per (leg, clock), and never gate legacy clock-less history.
+"""
+import json
+import time
+
+import pytest
+
+from benchmarks.common import CLOCK, append_bench_record, timed
+from benchmarks.gate import check_file, main as gate_main
+
+
+# --- timed() blocks on async dispatch ---------------------------------------
+
+
+class _AsyncResult:
+    """Mimics a dispatched-but-unfinished jax.Array: the work only
+    happens when someone blocks on it."""
+
+    def __init__(self, seconds):
+        self._seconds = seconds
+
+    def block_until_ready(self):
+        time.sleep(self._seconds)
+        return self
+
+
+def test_timed_blocks_on_async_outputs():
+    delay = 0.05
+    out, us = timed("sleepy", lambda: _AsyncResult(delay), repeats=2)
+    assert isinstance(out, _AsyncResult)
+    # the seed timed() returned in microseconds here; the blocking clock
+    # must charge (at least) the dispatched work to every repeat
+    assert us >= 0.8 * delay * 1e6, f"async work not timed: {us:.1f}us"
+
+
+def test_timed_still_cheap_for_host_values():
+    out, us = timed("host", lambda: (1.0, None, {"a": 2}), repeats=2)
+    assert out == (1.0, None, {"a": 2})
+    assert us < 1e5
+
+
+# --- append_bench_record durability -----------------------------------------
+
+
+def test_append_bench_record_roundtrip_and_clock(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    append_bench_record(path, {"speedup": 10.0})
+    append_bench_record(path, {"speedup": 11.0, "clock": "naive"})
+    data = json.loads(path.read_text())
+    assert [r["speedup"] for r in data["history"]] == [10.0, 11.0]
+    assert data["latest"]["speedup"] == 11.0
+    # the clock stamp is injected, but an explicit one is preserved
+    assert data["history"][0]["clock"] == CLOCK
+    assert data["history"][1]["clock"] == "naive"
+    # no tmp droppings left behind
+    assert [p.name for p in tmp_path.iterdir()] == ["BENCH_x.json"]
+
+
+def test_append_bench_record_preserves_corrupt_file(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    truncated = '{"latest": {"speedup": 5.0}, "history": [{"speed'
+    path.write_text(truncated)
+    append_bench_record(path, {"speedup": 12.0})
+    # the malformed original is preserved verbatim, not clobbered
+    sidecar = tmp_path / "BENCH_x.json.corrupt"
+    assert sidecar.read_text() == truncated
+    data = json.loads(path.read_text())
+    assert data["latest"]["speedup"] == 12.0
+    assert len(data["history"]) == 1
+
+
+def test_append_bench_record_non_dict_payload(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    path.write_text("[1, 2, 3]\n")   # valid json, wrong shape
+    append_bench_record(path, {"speedup": 1.0})
+    assert (tmp_path / "BENCH_x.json.corrupt").exists()
+    assert json.loads(path.read_text())["latest"]["speedup"] == 1.0
+
+
+def test_append_bench_record_does_not_mutate_caller_record(tmp_path):
+    rec = {"speedup": 2.0}
+    append_bench_record(tmp_path / "BENCH_x.json", rec)
+    assert rec == {"speedup": 2.0}
+
+
+# --- the regression ratchet -------------------------------------------------
+
+
+def _bench_file(tmp_path, records, name="BENCH_serve.json"):
+    path = tmp_path / name
+    path.write_text(json.dumps(
+        {"latest": records[-1], "history": records}))
+    return path
+
+
+def test_gate_fails_on_synthetic_regression(tmp_path, capsys):
+    _bench_file(tmp_path, [
+        {"speedup": 20.0, "clock": CLOCK, "attn_impl": "xla"},
+        {"speedup": 5.0, "clock": CLOCK, "attn_impl": "xla"},
+    ])
+    rc = gate_main(["--root", str(tmp_path), "--tolerance", "0.35"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_gate_passes_within_tolerance_and_on_improvement(tmp_path):
+    _bench_file(tmp_path, [
+        {"speedup": 20.0, "clock": CLOCK, "attn_impl": "xla"},
+        {"speedup": 14.0, "clock": CLOCK, "attn_impl": "xla"},  # -30% < 35%
+        {"speedup": 25.0, "clock": CLOCK, "attn_impl": "xla"},
+    ])
+    assert gate_main(["--root", str(tmp_path)]) == 0
+
+
+def test_gate_ratchets_against_best_not_latest(tmp_path):
+    # drift scenario: a slow record lands, then "recovers" to a value
+    # still far below the best — the ratchet must compare against BEST
+    _bench_file(tmp_path, [
+        {"speedup": 30.0, "clock": CLOCK, "attn_impl": "xla"},
+        {"speedup": 6.0, "clock": CLOCK, "attn_impl": "xla"},
+        {"speedup": 9.0, "clock": CLOCK, "attn_impl": "xla"},
+    ])
+    assert gate_main(["--root", str(tmp_path)]) == 1
+
+
+def test_gate_keys_on_leg_and_clock(tmp_path):
+    # pre-fix naive records are wildly higher (they never blocked); they
+    # must not become the baseline for post-fix blocking records, and a
+    # frozen naive group must never fail the gate
+    path = _bench_file(tmp_path, [
+        {"speedup": 500.0, "attn_impl": "xla"},              # naive legacy
+        {"speedup": 80.0, "clock": CLOCK, "attn_impl": "pallas_decode"},
+        {"speedup": 20.0, "clock": CLOCK, "attn_impl": "xla"},
+        {"speedup": 19.0, "clock": CLOCK, "attn_impl": "xla"},
+        {"leg": "poisson_burst", "clock": CLOCK,
+         "latency": {"wall": {}}},                           # no speedup
+    ])
+    assert gate_main(["--root", str(tmp_path)]) == 0
+    results = {(r["leg"], r["clock"]): r
+               for r in check_file(path, "speedup", True, 0.35)}
+    assert results[("xla", "naive")]["ok"]
+    assert "not gated" in results[("xla", "naive")]["note"]
+    assert results[("xla", CLOCK)]["best"] == 20.0
+    assert results[("pallas_decode", CLOCK)]["note"].startswith("no baseline")
+    assert ("poisson_burst", CLOCK) not in results
+
+
+def test_gate_missing_requested_bench_fails(tmp_path):
+    assert gate_main(["--root", str(tmp_path), "--bench", "serve"]) == 1
+    # ... but an empty dir with no explicit selection passes (nothing ran)
+    assert gate_main(["--root", str(tmp_path)]) == 0
+
+
+def test_gate_tolerance_validation(tmp_path):
+    with pytest.raises(SystemExit):
+        gate_main(["--root", str(tmp_path), "--tolerance", "1.5"])

@@ -12,8 +12,10 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serve import (Engine, EngineReference, Request, mixed_requests,
-                         run_staggered, staggered_groups)
+from repro.serve import (Engine, EngineReference, Request, Tracer,
+                         latency_summary, mixed_requests, poisson_requests,
+                         run_arrivals, run_staggered, staggered_groups,
+                         validate_chrome_trace)
 
 MAX_LEN = 48
 SLOTS = 3
@@ -295,6 +297,111 @@ def test_eos_and_slot_free_tick_parity_vs_reference(mp):
         "K=1 slot-free ticks must match the per-tick reference"
     # eos path exercised: some request stopped early on the eos token
     assert any(o[-1] == eos and len(o) > 1 for o in out_ref.values())
+
+
+def test_tick_stamp_parity_vs_reference(mp):
+    """Request docstring tick semantics, enforced: admit/first-token/done
+    ticks from the fused K=1 engine match the per-tick reference exactly,
+    including max_new_tokens=1 requests that terminate at prefill."""
+    model, params = mp
+
+    def stamps_of(engine_cls, **kw):
+        # max_new=(1, 6) forces prefill-terminated requests into the mix
+        reqs = poisson_requests(8, seed=11, vocab=512, arrival_rate=0.4,
+                                burst_amp=0.5, prompt_bounds=(2, 9),
+                                new_bounds=(1, 6))
+        eng = engine_cls(model, params, slots=SLOTS, max_len=MAX_LEN, **kw)
+        out = run_arrivals(eng, reqs)
+        return out, {r.uid: (r.admit_tick, r.first_token_tick, r.done_tick)
+                     for r in reqs}
+
+    out_ref, ref = stamps_of(EngineReference)
+    out_fused, fused = stamps_of(Engine, ticks_per_sync=1,
+                                 record_traffic=False)
+    assert out_fused == out_ref
+    assert fused == ref, "tick stamps diverged between engines"
+    assert any(len(o) == 1 for o in out_ref.values()), \
+        "workload must exercise a prefill-terminated (max_new=1) request"
+    for uid, (admit, first, done) in ref.items():
+        assert first == admit, "t0 is emitted at the admission tick"
+        assert done == admit + len(out_ref[uid]) - 2 if len(out_ref[uid]) > 1 \
+            else done == admit
+
+
+def test_bursty_arrivals_outputs_schedule_independent(mp):
+    """Greedy outputs under bursty Poisson admission == all-at-once batch:
+    the slot-isolation invariant extended to the real traffic generator."""
+    model, params = mp
+    eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                 ticks_per_sync=3, record_traffic=False)
+    reqs = poisson_requests(9, seed=3, vocab=512, arrival_rate=0.3,
+                            burst_amp=0.8, burst_period=24.0,
+                            prompt_bounds=(2, 9), new_bounds=(1, 7))
+    out_bursty = run_arrivals(eng, reqs)
+    assert len(out_bursty) == 9
+    eng.reset()
+    out_batch = run_staggered(eng, [list(poisson_requests(
+        9, seed=3, vocab=512, arrival_rate=0.3, burst_amp=0.8,
+        burst_period=24.0, prompt_bounds=(2, 9), new_bounds=(1, 7)))])
+    assert out_bursty == out_batch
+
+
+def test_run_budget_is_k_granular_and_reports_unfinished(mp):
+    """run(max_ticks) must never overshoot the budget mid-window (the
+    window scan length is static) and must report what's left."""
+    model, params = mp
+    eng = Engine(model, params, slots=2, max_len=MAX_LEN,
+                 ticks_per_sync=4, record_traffic=False)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=[2 + uid, 3], max_new_tokens=20))
+    left = eng.run(max_ticks=6)      # one K=4 window fits, a second doesn't
+    assert eng.ticks == 4, "a partial window must not run (no overshoot)"
+    assert left == 3                 # 2 mid-decode in slots + 1 queued
+    assert eng.run() == 0            # unlimited-by-default finishes the rest
+    assert all(r is None for r in eng.slot_req)
+
+
+def test_run_arrivals_strict_raises_on_budget_exhaustion(mp):
+    model, params = mp
+    eng = Engine(model, params, slots=1, max_len=MAX_LEN,
+                 ticks_per_sync=2, record_traffic=False)
+    reqs = poisson_requests(4, seed=0, vocab=512, arrival_rate=2.0,
+                            prompt_bounds=(2, 4), new_bounds=(6, 10))
+    with pytest.raises(RuntimeError, match="did not finish"):
+        run_arrivals(eng, reqs, max_ticks=4)
+    eng.reset()
+    partial = run_arrivals(eng, poisson_requests(
+        4, seed=0, vocab=512, arrival_rate=2.0, prompt_bounds=(2, 4),
+        new_bounds=(6, 10)), max_ticks=4, strict=False)
+    assert len(partial) < 4
+
+
+def test_engine_latency_stamps_and_tracer(mp):
+    """After an arrival-driven run every finished request carries the full
+    stamp set, latency_summary has non-empty percentiles in both domains,
+    and the tracer saw prefill / decode-window / drain spans that export
+    to a valid chrome trace."""
+    model, params = mp
+    tracer = Tracer(name="test")
+    eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                 ticks_per_sync=2, record_traffic=False, tracer=tracer)
+    reqs = poisson_requests(6, seed=4, vocab=512, arrival_rate=0.5,
+                            prompt_bounds=(2, 8), new_bounds=(2, 6))
+    run_arrivals(eng, reqs)
+    for r in reqs:
+        assert r.done and r.submit_time is not None
+        assert r.admit_time is not None and r.done_time is not None
+        assert r.submit_tick <= r.admit_tick == r.first_token_tick
+        assert r.submit_time <= r.admit_time <= r.done_time
+    s = latency_summary(reqs)
+    assert s["completed"] == s["n"] == 6
+    for domain in ("wall", "ticks"):
+        assert {"p50", "p95", "p99"} <= set(s[domain]["e2e_s" if domain ==
+                                            "wall" else "e2e"])
+    trace = tracer.to_chrome_trace()
+    validate_chrome_trace(trace)
+    cats = {e.get("cat") for e in trace["traceEvents"] if e["ph"] == "X"}
+    assert {"prefill", "decode", "host"} <= cats
 
 
 # --- request validation -----------------------------------------------------

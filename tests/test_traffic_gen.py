@@ -1,0 +1,113 @@
+"""Property suite for the serve traffic generator (model-free).
+
+Poisson arrival statistics, heavy-tailed length bounds, burst
+modulation, seeded reproducibility, and input validation — the
+engine-facing side (run_arrivals parity, latency stamps) lives in
+tests/test_serve_engine.py.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve import (lognormal_lengths, poisson_arrivals,
+                         poisson_requests)
+
+
+def test_arrivals_sorted_strictly_increasing():
+    rng = np.random.default_rng(0)
+    t = poisson_arrivals(500, rate=0.5, rng=rng)
+    assert len(t) == 500
+    assert np.all(t > 0)
+    assert np.all(np.diff(t) > 0)
+
+
+def test_homogeneous_poisson_mean_within_tolerance():
+    rng = np.random.default_rng(1)
+    for rate in (0.25, 2.0):
+        t = poisson_arrivals(4000, rate=rate, rng=rng)
+        mean_gap = float(np.mean(np.diff(t)))
+        # n=4000 exponential gaps: sample mean within ~5 sigma of 1/rate
+        assert mean_gap == pytest.approx(1.0 / rate, rel=0.1)
+
+
+def test_burst_modulation_shifts_mass_into_the_peak():
+    """lambda(t) = r (1 + a sin(2 pi t / P)): the first half of each
+    period is boosted, the second suppressed — arrival mass must follow."""
+    rng = np.random.default_rng(2)
+    period = 40.0
+    t = poisson_arrivals(6000, rate=1.0, rng=rng, burst_amp=0.9,
+                         burst_period=period)
+    assert np.all(np.diff(t) > 0)
+    phase = np.mod(t, period)
+    peak = int(np.sum(phase < period / 2))
+    trough = len(t) - peak
+    assert peak > 1.5 * trough, (peak, trough)
+
+
+def test_burst_zero_matches_homogeneous_stream():
+    # amp=0 must take the plain exponential-gap path (every proposal
+    # accepted), so the long-run rate is just the homogeneous one
+    rng = np.random.default_rng(3)
+    t = poisson_arrivals(3000, rate=0.5, rng=rng, burst_amp=0.0)
+    assert float(np.mean(np.diff(t))) == pytest.approx(2.0, rel=0.1)
+
+
+def test_lognormal_lengths_honor_bounds():
+    rng = np.random.default_rng(4)
+    ls = lognormal_lengths(2000, rng=rng, log_mean=2.0, sigma=1.0,
+                           bounds=(3, 17))
+    assert ls.min() >= 3 and ls.max() <= 17
+    assert ls.dtype == np.int64
+    # heavy tail actually exercises both clips
+    assert (ls == 3).any() and (ls == 17).any()
+
+
+def test_poisson_requests_bounds_and_reproducibility():
+    kw = dict(seed=7, vocab=256, arrival_rate=0.5, burst_amp=0.5,
+              prompt_bounds=(2, 11), new_bounds=(1, 9))
+    a = poisson_requests(50, **kw)
+    b = poisson_requests(50, **kw)
+    c = poisson_requests(50, **dict(kw, seed=8))
+    assert [dataclasses.asdict(r) for r in a] == \
+        [dataclasses.asdict(r) for r in b], "same seed must reproduce"
+    assert [r.prompt for r in a] != [r.prompt for r in c]
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals)
+    assert [r.uid for r in a] == list(range(50))
+    for r in a:
+        assert 2 <= len(r.prompt) <= 11
+        assert 1 <= r.max_new_tokens <= 9
+        assert all(1 <= t < 256 for t in r.prompt)
+        assert r.arrival > 0
+
+
+def test_poisson_requests_temperature_every():
+    reqs = poisson_requests(6, seed=0, temperature=0.7, temperature_every=2)
+    assert [r.temperature for r in reqs] == [0.0, 0.7] * 3
+
+
+def test_generator_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(5, rate=0.0, rng=rng)
+    with pytest.raises(ValueError, match="burst_amp"):
+        poisson_arrivals(5, rate=1.0, rng=rng, burst_amp=1.5)
+    with pytest.raises(ValueError, match="burst_period"):
+        poisson_arrivals(5, rate=1.0, rng=rng, burst_amp=0.5,
+                         burst_period=0.0)
+    with pytest.raises(ValueError, match="bounds"):
+        lognormal_lengths(5, rng=rng, log_mean=1.0, sigma=0.5,
+                          bounds=(9, 3))
+
+
+def test_mean_rate_against_integrated_intensity():
+    """Time-averaged modulated rate equals the base rate (sin integrates
+    to ~0 over whole periods): n arrivals should take ~n/rate ticks."""
+    rng = np.random.default_rng(5)
+    n, rate = 5000, 1.0
+    t = poisson_arrivals(n, rate=rate, rng=rng, burst_amp=0.8,
+                         burst_period=16.0)
+    expected = n / rate
+    assert math.isclose(t[-1], expected, rel_tol=0.1), (t[-1], expected)
