@@ -146,12 +146,35 @@ def analyze_serve(records: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB
     most, and Roy et al. (arXiv 2308.02024) show the verdict hinges on
     measured per-step traffic — which is exactly what these records carry.
 
+    Records carrying a ``unique_page_fraction`` (the paged engine's
+    measured share of physically-unique KV page reads per decode window,
+    ``serve.engine.PagedEngine.serve_records``) get their
+    ``bytes_per_device`` and ``memory_s`` scaled by it before scoring:
+    radix-tree prefix sharing maps many slots onto the same physical
+    pages, so the tier's real KV traffic — and with it the SRAM/STT/SOT
+    energy/EDP verdicts — shrinks with sharing.  Compute and collective
+    terms are left alone (every slot still runs its own matmuls).
+
     Raises ``ValueError`` naming the offending record when roofline terms
     are missing (e.g. the engine ran with ``record_traffic=False`` and a
     record was assembled by hand).
     """
     _require_roofline(records, "run the engine with record_traffic=True")
-    return analyze_records(records, tier_mb)
+    scaled = []
+    for rec in records:
+        upf = rec.get("unique_page_fraction")
+        if upf is None:
+            scaled.append(rec)
+            continue
+        if not 0.0 < upf <= 1.0:
+            raise ValueError(
+                f"record {rec.get('shape', '?')!r}: unique_page_fraction "
+                f"{upf} outside (0, 1]")
+        roof = dict(rec["roofline"])
+        roof["bytes_per_device"] *= upf
+        roof["memory_s"] *= upf
+        scaled.append({**rec, "roofline": roof})
+    return analyze_records(scaled, tier_mb)
 
 
 def analyze_train(records: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB

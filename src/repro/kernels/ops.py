@@ -14,7 +14,9 @@ import jax.numpy as jnp
 from repro.kernels import cache_sim as _cs
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rglru_scan as _rg
+from repro.kernels import sampling as _sm
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -55,6 +57,41 @@ def decode_attention_fused(q, k, v, new_k, new_v, pos, window, *,
     return _da.decode_attention_fused(
         q, k, v, new_k, new_v, pos, window, logit_cap=logit_cap, bk=bk,
         interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("logit_cap", "interpret"))
+def paged_decode_attention(q, k, v, page_table, pos, window, *,
+                           logit_cap=0.0, interpret=None):
+    """Paged serve-decode attention (pool already holds the new row).
+
+    q (B,H,hd); k/v pools (P,ps,K,hd); page_table (B,nb) i32; pos (B,)
+    i32; window i32 scalar (may be traced; <= 0 = global) -> (B,H,hd)."""
+    return _pa.paged_decode_attention(
+        q, k, v, page_table, pos, window, logit_cap=logit_cap,
+        interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("logit_cap", "interpret"))
+def paged_decode_attention_fused(q, k, v, new_k, new_v, page_table, pos,
+                                 window, *, logit_cap=0.0, interpret=None):
+    """Fused through-the-page-table KV scatter + paged decode attention.
+
+    Writes new_k/new_v (B,K,hd) into each row's boundary page at
+    pos[b] % ps inside the launch (aliased pools) and returns
+    (o, k_pool, v_pool)."""
+    return _pa.paged_decode_attention_fused(
+        q, k, v, new_k, new_v, page_table, pos, window,
+        logit_cap=logit_cap, interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("bv", "interpret"))
+def fused_sample(logits, temps, key, *, bv=512, interpret=None):
+    """One-launch greedy/temperature next-token sample.
+
+    logits (B,V); temps (B,) (<= 0 greedy, bitwise == argmax; > 0
+    in-kernel Gumbel-max); key (2,) uint32 -> (B,) int32."""
+    return _sm.fused_sample(logits, temps, key, bv=bv,
+                            interpret=_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,0 +1,201 @@
+"""Pallas TPU *paged* decode-attention kernel (DESIGN.md §15).
+
+Extends ``kernels/decode_attention.py`` (§13) to a KV cache that lives
+as a shared physical page pool instead of one dense ``(B, L)`` buffer
+per slot: k/v are ``(P, ps, K, hd)`` pools (one page = ``ps`` token
+positions) and each slot owns a logical->physical page table row
+``pt (B, nb)``.  Requests with a common prompt prefix map the *same*
+physical pages, so the pool holds one copy of every shared prefix.
+
+The page table rides in as a third scalar-prefetch operand and the KV
+block-fetch index map dereferences it:
+
+  grid (B, nb), j innermost (sequential, carries scratch);
+  kv index map   (pt[b, clip(j, lo_b, tb_b)], 0, 0, 0)
+
+with ``tb_b = pos[b] // ps`` the row's last live logical page and
+``lo_b`` the first page inside its local window — DMA is still clamped
+to each slot's own depth exactly as in the dense kernel, and Pallas
+elides refetches when consecutive grid steps map the same physical
+page.  Logical key positions are reconstructed in-kernel as
+``j * ps + iota`` (valid because accumulation is gated on
+``lo <= j <= tb`` where the clamp is the identity).
+
+The FUSED variant scatters the new token's K/V row through the page
+table into the *boundary page* (the page holding ``pos[b]``) inside
+the same launch, via aliased pool buffers.  Preconditions the engine
+maintains (DESIGN.md §15): each live row's boundary page is private to
+that row (copy-on-write at admission guarantees it), so the in-place
+row injection never races; pages shared read-only are written back
+bit-identically, and fully unmapped pages keep their input bits.
+
+Layouts: q (B, H, hd); k/v pools (P, ps, K, hd); page_table (B, nb)
+int32; pos (B,) int32; window () int32 (0 or negative = global; may be
+a traced per-layer scalar) -> o (B, H, hd) [, updated k/v pools].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.decode_attention import NEG_INF, _block_bounds
+
+
+def _paged_kernel(pt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref, *rest,
+                  ps: int, group: int, logit_cap: float, scale: float,
+                  fused: bool):
+    if fused:
+        nk_ref, nv_ref, o_ref, ck_ref, cv_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    pos_b = pos_ref[b]
+    win = win_ref[0]
+    lo, tb = _block_bounds(pos_b, win, ps)
+    jc = jnp.clip(j, lo, tb)          # logical page actually mapped
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kb = k_ref[0].astype(jnp.float32)                     # (ps, K, hd)
+    vb = v_ref[0].astype(jnp.float32)
+    if fused:
+        # The boundary page holds the write position: inject the new
+        # token's K/V row and write the visited page back through the
+        # page table (rows > pos_b % ps stay bit-identical; the page
+        # is private to this slot by the CoW admission rule).
+        row = jax.lax.broadcasted_iota(jnp.int32, (kb.shape[0], 1, 1), 0)
+        hit = (jc == tb) & (row == pos_b % ps)
+        kb = jnp.where(hit, nk_ref[0].astype(jnp.float32)[None], kb)
+        vb = jnp.where(hit, nv_ref[0].astype(jnp.float32)[None], vb)
+        ck_ref[0] = kb.astype(ck_ref.dtype)
+        cv_ref[0] = vb.astype(cv_ref.dtype)
+
+    @pl.when((j >= lo) & (j <= tb))
+    def _accumulate():
+        q = (q_ref[0].astype(jnp.float32) * scale).reshape(
+            kb.shape[1], group, -1)
+        s = jnp.einsum("kgd,tkd->kgt", q, kb)             # (K, G, ps)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        # logical position of each key row (jc == j inside the gate)
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        ok = k_pos <= pos_b
+        ok &= (win <= 0) | (k_pos > pos_b - win)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
+        acc_scr[...] = (acc_scr[...] * corr[..., None]
+                        + jnp.einsum("kgt,tkd->kgd", p, vb))
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        acc = acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)[..., None]
+        o_ref[0] = acc.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def _call(q, k, v, page_table, pos, window, new_k, new_v, *, logit_cap,
+          fused, interpret):
+    B, H, hd = q.shape
+    P, ps, K, _ = k.shape
+    nb = page_table.shape[1]
+    if H % K:
+        raise ValueError(f"q heads {H} not divisible by kv heads {K}")
+    G = H // K
+
+    pt = jnp.asarray(page_table, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _paged_kernel, ps=ps, group=G, logit_cap=float(logit_cap),
+        scale=hd ** -0.5, fused=fused)
+
+    def q_map(b, j, pt_ref, pos_ref, win_ref):
+        return (b, 0, 0)
+
+    def kv_map(b, j, pt_ref, pos_ref, win_ref):
+        lo, tb = _block_bounds(pos_ref[b], win_ref[0], ps)
+        return (pt_ref[b, jnp.clip(j, lo, tb)], 0, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, H, hd), q_map),
+        pl.BlockSpec((1, ps, K, hd), kv_map),
+        pl.BlockSpec((1, ps, K, hd), kv_map),
+    ]
+    out_specs = [pl.BlockSpec((1, H, hd), q_map)]
+    out_shape = [jax.ShapeDtypeStruct((B, H, hd), q.dtype)]
+    operands = [q, k, v]
+    scratch = [
+        pltpu.VMEM((K, G), jnp.float32),      # m (running max, per head)
+        pltpu.VMEM((K, G), jnp.float32),      # l (running sum, per head)
+        pltpu.VMEM((K, G, hd), jnp.float32),  # acc
+    ]
+    aliases = {}
+    if fused:
+        in_specs += [pl.BlockSpec((1, K, hd), q_map),
+                     pl.BlockSpec((1, K, hd), q_map)]
+        operands += [new_k, new_v]
+        out_specs += [pl.BlockSpec((1, ps, K, hd), kv_map),
+                      pl.BlockSpec((1, ps, K, hd), kv_map)]
+        out_shape += [jax.ShapeDtypeStruct(k.shape, k.dtype),
+                      jax.ShapeDtypeStruct(v.shape, v.dtype)]
+        # pool in-place: operand indices count the 3 scalar-prefetch
+        # args (pt, pos, win), so k/v sit at 4/5; pages the grid never
+        # maps keep their input bits.
+        aliases = {4: 1, 5: 2}
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(pt, pos, win, *operands)
+    return tuple(out) if fused else out[0]
+
+
+def paged_decode_attention(q, k, v, page_table, pos, window=0, *,
+                           logit_cap: float = 0.0, interpret: bool = False):
+    """Paged decode attention; the pool already holds the new KV row.
+
+    q (B,H,hd); k/v pools (P,ps,K,hd); page_table (B,nb) i32; pos (B,)
+    i32 -> o (B,H,hd)."""
+    return _call(q, k, v, page_table, pos, window, None, None,
+                 logit_cap=logit_cap, fused=False, interpret=interpret)
+
+
+def paged_decode_attention_fused(q, k, v, new_k, new_v, page_table, pos,
+                                 window=0, *, logit_cap: float = 0.0,
+                                 interpret: bool = False):
+    """Fused through-the-page-table KV scatter + paged decode attention.
+
+    Writes ``new_k/new_v`` (B,K,hd) into each row's boundary page at
+    ``pos[b] % ps`` inside the launch (aliased pools) and attends
+    ``k_idx <= pos[b]``.  Returns (o, k_pool, v_pool).  Precondition:
+    every live row's boundary page is private to that row (the
+    engine's CoW-at-admission rule).
+    """
+    return _call(q, k, v, page_table, pos, window, new_k, new_v,
+                 logit_cap=logit_cap, fused=True, interpret=interpret)

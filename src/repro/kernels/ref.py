@@ -52,6 +52,21 @@ def decode_attention_ref(q, k, v, pos, window=0, *, logit_cap=0.0):
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k, v, page_table, pos, window=0, *,
+                               logit_cap=0.0):
+    """Oracle for the paged decode kernel: gather each row's pages from
+    the physical pool into a linear (B, L, K, hd) cache, then run the
+    dense decode oracle.  q (B,H,hd); k/v pools (P,ps,K,hd);
+    page_table (B,nb) i32; pos (B,)."""
+    B = q.shape[0]
+    P, ps, K, hd = k.shape
+    nb = page_table.shape[1]
+    lin_k = k[page_table].reshape(B, nb * ps, K, hd)
+    lin_v = v[page_table].reshape(B, nb * ps, K, hd)
+    return decode_attention_ref(q, lin_k, lin_v, pos, window,
+                                logit_cap=logit_cap)
+
+
 def ssd_scan_ref(x, dt, dtA, Bmat, Cmat):
     """Naive O(S^2) SSD. x (B,H,S,P); dt/dtA (B,H,S); B/C (B,S,N)."""
     B, H, S, P = x.shape

@@ -1,0 +1,133 @@
+"""Pallas TPU fused token-sampling kernel for the serve decode epilogue.
+
+The engine's two-step sampler (``jnp.argmax`` + ``jax.random.categorical``
++ ``jnp.where`` over temperature) round-trips the full ``(B, V)`` logit
+tensor through three separate XLA ops per tick.  This kernel folds the
+whole per-row sample into one launch blocked over the vocab:
+
+  grid (B, nv), j innermost (sequential, carries scratch);
+  per block: running (max, first-argmax) reduction in VMEM scratch.
+
+Greedy rows (``temps[b] <= 0``) reduce the raw logits and are
+*bitwise-equal* to ``jnp.argmax`` (strictly-greater cross-block updates
+plus min-index tie-breaks inside a block reproduce first-occurrence
+semantics exactly).  Temperature rows add in-kernel Gumbel noise to
+``logits / temp`` — a Gumbel-max sample from the same softmax
+distribution as ``jax.random.categorical``, but NOT the same draw: the
+kernel derives its bits from a counter-based murmur3-finalizer hash of
+(key words, flat element index), chosen over ``pltpu.prng_*`` because
+it produces identical bits in interpret (CPU) and compiled (TPU) mode
+— so only greedy rows are parity-pinned against the XLA path
+(DESIGN.md §15).  Sampled rows are deterministic given (key, shapes).
+
+Layouts: logits (B, V); temps (B,) f32; key (2,) uint32 -> (B,) int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.decode_attention import NEG_INF, decode_block_size
+
+
+def _shr(h, n):
+    return jax.lax.shift_right_logical(h, jnp.uint32(n))
+
+
+def _fmix(h):
+    """murmur3 32-bit finalizer (uint32, wrapping multiplies)."""
+    h ^= _shr(h, 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h ^= _shr(h, 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h ^= _shr(h, 16)
+    return h
+
+
+def _sample_kernel(seed_ref, temps_ref, logits_ref, o_ref, m_scr, i_scr, *,
+                   bv: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[0, 0] = NEG_INF
+        i_scr[0, 0] = 0
+
+    x = logits_ref[...].astype(jnp.float32)               # (1, bv)
+    t = temps_ref[0, 0]
+
+    # Gumbel-max: argmax(logits/t + g) ~ Categorical(softmax(logits/t)).
+    # Counter = the element's flat (row, vocab) index; each key word is
+    # folded in through a murmur3 finalizer round.
+    col = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    vocab = jnp.uint32(pl.num_programs(1) * bv)
+    ctr = (b.astype(jnp.uint32) * vocab
+           + j.astype(jnp.uint32) * jnp.uint32(bv) + col)
+    k0 = jax.lax.bitcast_convert_type(seed_ref[0], jnp.uint32)
+    k1 = jax.lax.bitcast_convert_type(seed_ref[1], jnp.uint32)
+    bits = _fmix(_fmix(ctr ^ k0) ^ k1)
+    frac = _shr(bits, 9).astype(jnp.float32)
+    u = frac * (2.0 ** -23) + (2.0 ** -24)                # u in (0, 1)
+    g = -jnp.log(-jnp.log(u))
+    x = jnp.where(t > 0.0, x / jnp.maximum(t, 1e-6) + g, x)
+
+    vmax = jnp.max(x)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    # first index attaining the block max (jnp.argmax tie-break)
+    loc = jnp.min(jnp.where(x == vmax, col, jnp.int32(2 ** 31 - 1)))
+    cand = j * bv + loc
+    better = vmax > m_scr[0, 0]   # strict: earlier blocks win ties
+    i_scr[0, 0] = jnp.where(better, cand, i_scr[0, 0])
+    m_scr[0, 0] = jnp.where(better, vmax, m_scr[0, 0])
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[0, 0] = i_scr[0, 0]
+
+
+def fused_sample(logits, temps, key, *, bv: int = 512,
+                 interpret: bool = False):
+    """One-launch greedy/temperature sample of the next token per row.
+
+    logits (B, V); temps (B,) — <= 0 greedy, > 0 Gumbel-max at that
+    temperature; key (2,) uint32 PRNG key data -> tokens (B,) int32.
+    """
+    B, V = logits.shape
+    bv = decode_block_size(V, bv)
+    nv = V // bv
+
+    seed = jax.lax.bitcast_convert_type(
+        jnp.asarray(key, jnp.uint32), jnp.int32)
+    temps2 = jnp.asarray(temps, jnp.float32).reshape(B, 1)
+
+    def row_map(b, j, seed_ref):
+        return (b, 0)
+
+    def blk_map(b, j, seed_ref):
+        return (b, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nv),
+        in_specs=[
+            pl.BlockSpec((1, 1), row_map),
+            pl.BlockSpec((1, bv), blk_map),
+        ],
+        out_specs=[pl.BlockSpec((1, 1), row_map)],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),  # running max
+            pltpu.VMEM((1, 1), jnp.int32),    # its first index
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_sample_kernel, bv=bv),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32)],
+        interpret=interpret,
+    )(seed, temps2, logits)
+    return out[0][:, 0]

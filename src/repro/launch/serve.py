@@ -31,8 +31,9 @@ import jax
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.launch.mesh import mesh_context
 from repro.models import build_model
-from repro.serve import (Engine, Tracer, latency_summary, mixed_requests,
-                         poisson_requests, run_arrivals, run_staggered,
+from repro.serve import (Engine, PagedEngine, Tracer, latency_summary,
+                         mixed_requests, poisson_requests, run_arrivals,
+                         run_staggered, shared_prefix_requests,
                          staggered_groups)
 from repro.sharding import default_rules, tree_shardings
 from repro.train.elastic import remesh
@@ -59,11 +60,30 @@ def main():
                     help="smoke-sized config (--no-reduced for full size)")
     ap.add_argument("--ticks-per-sync", type=int, default=8,
                     help="fused decode ticks per host drain (K)")
-    ap.add_argument("--attn-impl", choices=("xla", "pallas_decode"),
+    ap.add_argument("--attn-impl",
+                    choices=("xla", "pallas_decode", "paged",
+                             "pallas_paged"),
                     default="xla",
                     help="decode-tick attention: jnp full-cache path (the "
-                         "parity oracle) or the Pallas blocked kernel with "
-                         "fused KV scatter (interpret mode on CPU)")
+                         "parity oracle), the Pallas blocked kernel with "
+                         "fused KV scatter, the paged-KV jnp gather path, "
+                         "or the Pallas paged kernel with scalar-prefetch "
+                         "page tables (interpret mode on CPU); 'paged'/"
+                         "'pallas_paged' run the PagedEngine with "
+                         "radix-tree prefix sharing (DESIGN.md §15)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (paged engine only)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical page-pool size (paged engine only; "
+                         "default slots * max_len / page_size)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="serve the shared-prefix template workload and "
+                         "FAIL unless the paged engine actually shares "
+                         "prefix pages (zero prefix hits = regression)")
+    ap.add_argument("--sample-impl", choices=("xla", "pallas"),
+                    default="xla",
+                    help="token sampling: two-step XLA path or the fused "
+                         "one-launch Pallas kernel")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for every 2nd request "
                          "(0 = all greedy)")
@@ -96,13 +116,40 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         p_sh = tree_shardings(model.param_axes(), params, mesh, rules)
         params = jax.tree.map(jax.device_put, params, p_sh)
-        eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
-                     seed=args.seed, ticks_per_sync=args.ticks_per_sync,
-                     record_traffic=args.verdicts,
-                     attn_impl=args.attn_impl, tracer=tracer)
+        paged = args.attn_impl in ("paged", "pallas_paged")
+        if paged:
+            eng = PagedEngine(
+                model, params, slots=args.slots, max_len=args.max_len,
+                page_size=args.page_size, num_pages=args.num_pages,
+                seed=args.seed, ticks_per_sync=args.ticks_per_sync,
+                record_traffic=args.verdicts, sample_impl=args.sample_impl,
+                attn_impl=("pallas_paged" if args.attn_impl == "pallas_paged"
+                           else "xla"), tracer=tracer)
+        elif args.shared_prefix:
+            raise SystemExit("--shared-prefix requires a paged engine "
+                             "(--attn-impl paged or pallas_paged)")
+        else:
+            eng = Engine(model, params, slots=args.slots,
+                         max_len=args.max_len, seed=args.seed,
+                         ticks_per_sync=args.ticks_per_sync,
+                         record_traffic=args.verdicts,
+                         sample_impl=args.sample_impl,
+                         attn_impl=args.attn_impl, tracer=tracer)
         temp_every = 2 if args.temperature > 0 else 0
         t0 = time.time()
-        if args.arrival_rate > 0:
+        if args.shared_prefix:
+            # template length deliberately off the page grid so boundary
+            # CoW copies exercise on every admission wave
+            tlen = max(args.page_size + args.page_size // 2,
+                       args.max_len // 2 - args.page_size // 2)
+            reqs = shared_prefix_requests(
+                args.requests, seed=args.seed, vocab=cfg.vocab_size,
+                template_len=min(tlen, args.max_len - 10),
+                suffix_lens=(2, 8),
+                max_new=(2, max(2, args.max_len // 8)),
+                temperature=args.temperature, temperature_every=temp_every)
+            outputs = run_staggered(eng, staggered_groups(reqs, args.slots))
+        elif args.arrival_rate > 0:
             reqs = poisson_requests(
                 args.requests, seed=args.seed, vocab=cfg.vocab_size,
                 arrival_rate=args.arrival_rate, burst_amp=args.burst_amp,
@@ -127,7 +174,20 @@ def main():
           f"{eng.ticks} ticks (K={args.ticks_per_sync}, "
           f"attn={args.attn_impl}) = {ntok / dt:.0f} tok/s on "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
-    if args.arrival_rate > 0:
+    if paged:
+        st = eng.paged_stats()
+        print(f"paged KV: pages-in-use high-water {st['pages_hwm']}"
+              f"/{eng.num_pages} (page_size={eng.page_size}), "
+              f"prefix-hit rate {st['prefix_hit_rate']:.2f} "
+              f"({st['prefix_tokens']}/{st['prompt_tokens']} prompt "
+              f"tokens), CoW copies {st['cow_copies']}, "
+              f"radix nodes {st['radix_nodes']}, "
+              f"deferred {st['deferred']}, evicted {st['evicted_pages']}")
+        if args.shared_prefix and st["prefix_tokens"] == 0:
+            raise SystemExit(
+                "shared-prefix workload produced ZERO prefix hits — "
+                "radix-tree sharing is broken")
+    if args.arrival_rate > 0 and not args.shared_prefix:
         summary = latency_summary(reqs)
         _print_latency(summary)
         if (summary["completed"] != args.requests or not summary["wall"]

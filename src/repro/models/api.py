@@ -46,24 +46,45 @@ class Model:
     def cache_axes(self, batch: int, max_len: int) -> Axes:
         return axes_of(self.cache_defs(batch, max_len))
 
+    # ---- paged cache (serve; DESIGN.md §15) -----------------------------
+    def paged_cache_defs(self, num_pages: int, page_size: int) -> ParamDefs:
+        """Per-layer physical KV page pools; ``num_pages`` includes the
+        reserved trailing TRASH page."""
+        return tf.paged_cache_param_defs(self.cfg, num_pages, page_size)
+
+    def init_paged_cache(self, num_pages: int, page_size: int) -> Params:
+        return materialize(self.paged_cache_defs(num_pages, page_size),
+                           jax.random.PRNGKey(0), self.cfg.dtype)
+
+    def paged_cache_axes(self, num_pages: int, page_size: int) -> Axes:
+        return axes_of(self.paged_cache_defs(num_pages, page_size))
+
     # ---- forward --------------------------------------------------------
     def forward(self, params: Params, batch: Dict[str, jax.Array], *,
                 mode: str = "train", cache: Optional[Params] = None,
-                cache_pos=None, attn_impl: str = "chunked"):
+                cache_pos=None, attn_impl: str = "chunked",
+                page_table=None, kv_write_mask=None):
         cfg = self.cfg
         if cfg.family == "encdec":
+            if page_table is not None:
+                raise ValueError("paged KV serving requires a dense/moe/vlm "
+                                 "decoder (encdec has ring-buffer caches)")
             return tf.encdec_forward(
                 cfg, params, batch["tokens"], frames=batch.get("frames"),
                 enc_out=batch.get("enc_out"), mode=mode, cache=cache,
                 cache_pos=cache_pos, attn_impl=attn_impl)
         if cfg.family == "hybrid":
+            if page_table is not None:
+                raise ValueError("paged KV serving requires a dense/moe/vlm "
+                                 "decoder (hybrid has recurrent state)")
             return tf.hybrid_forward(
                 cfg, params, batch["tokens"], mode=mode, cache=cache,
                 cache_pos=cache_pos, attn_impl=attn_impl)
         return tf.decoder_forward(
             cfg, params, batch["tokens"], mode=mode, cache=cache,
             cache_pos=cache_pos, vision_embeds=batch.get("vision_embeds"),
-            attn_impl=attn_impl)
+            attn_impl=attn_impl, page_table=page_table,
+            kv_write_mask=kv_write_mask)
 
     def loss(self, params: Params, batch: Dict[str, jax.Array], *,
              attn_impl: str = "chunked") -> jax.Array:
@@ -79,14 +100,21 @@ class Model:
         return logits, cache
 
     def decode_step(self, params: Params, cache: Params, batch:
-                    Dict[str, jax.Array], pos, *, attn_impl: str = "chunked"):
+                    Dict[str, jax.Array], pos, *, attn_impl: str = "chunked",
+                    page_table=None, kv_write_mask=None):
         """One decode step. ``pos`` is a scalar write position for the whole
         batch, or — for ``supports_batched_serve`` families — a (B,) int32
         vector of per-row positions (continuous batching: every serve slot
-        decodes at its own depth in one fused step)."""
+        decodes at its own depth in one fused step).
+
+        With ``page_table`` (B, nb) the cache is the paged pool and
+        ``pos`` each row's first write position; tokens (B, S) with
+        S > 1 is the paged suffix prefill (writes masked by
+        ``kv_write_mask``; see DESIGN.md §15)."""
         logits, new_cache, _ = self.forward(
             params, batch, mode="decode", cache=cache, cache_pos=pos,
-            attn_impl=attn_impl)
+            attn_impl=attn_impl, page_table=page_table,
+            kv_write_mask=kv_write_mask)
         return logits, new_cache
 
     @property

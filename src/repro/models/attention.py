@@ -244,6 +244,40 @@ def decode_attention(q, k, v, *, pos, window=0, logit_cap=0.0) -> jax.Array:
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def paged_suffix_attention(q, k, v, *, q_pos, window=0,
+                           logit_cap=0.0) -> jax.Array:
+    """Suffix-prefill attention over a row-linearized paged cache.
+
+    q (B,S,H,hd) suffix queries; k/v (B,L,K,hd) caches gathered through
+    each row's page table that ALREADY hold the suffix rows at their
+    positions; q_pos (B,S) global query positions — row-varying because
+    each suffix starts at that row's shared-prefix length (DESIGN.md
+    §15).  Generalizes ``decode_attention`` to S queries per row: query
+    (b, s) attends ``k_idx <= q_pos[b, s]`` inside its window, which is
+    both the causal mask within the suffix and the guard that hides
+    TRASH-page rows past the row's own depth.
+    """
+    B, S, H, hd = q.shape
+    L, K = k.shape[1], k.shape[2]
+    G = H // K
+    qr = q.reshape(B, S, K, G, hd).astype(jnp.float32) * hd ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bskgt", qr, k.astype(jnp.float32))
+    logits = softcap(logits, logit_cap)
+    k_idx = jnp.arange(L, dtype=jnp.int32)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    ok = k_idx[None, None, :] <= q_pos[:, :, None]
+    if isinstance(window, int):
+        if window > 0:
+            ok &= k_idx[None, None, :] > q_pos[:, :, None] - window
+    elif window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        ok &= (w <= 0) | (k_idx[None, None, :] > q_pos[:, :, None] - w)
+    logits = logits + jnp.where(ok, 0.0, NEG_INF)[:, :, None, None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
 def naive_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
                     q_offset=0, kv_len=None, k_positions=None) -> jax.Array:
     """Reference O(S^2)-memory attention (oracle, tiny smoke configs, and
@@ -276,6 +310,8 @@ def attention_block(
     kv_source: Optional[jax.Array] = None,  # cross-attention source (B,Skv,D)
     return_kv: bool = False,           # prefill: return computed k/v as cache
     impl: str = "chunked",
+    page_table=None,                   # paged serve: (B, nb) int32
+    kv_write_mask=None,                # paged suffix prefill: (B, S) bool
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """One attention op incl. projections, RoPE, cache handling."""
     B, S, D = x.shape
@@ -300,6 +336,63 @@ def attention_block(
         # scalar position broadcast every write across all slots) and
         # attends its own prefix via the per-row mask in decode_attention.
         cp = jnp.asarray(cache_pos, jnp.int32)
+        if page_table is not None:
+            # paged serve (DESIGN.md §15): KV lives in a shared physical
+            # page pool (P, ps, K, hd) per layer; row b's logical page i
+            # maps to page_table[b, i].  The LAST pool page is the
+            # reserved TRASH target — masked/out-of-range writes land
+            # there (always finite values, so masked softmax terms stay
+            # exact zeros) and the per-row mask keeps it unreadable.
+            pt = jnp.asarray(page_table, jnp.int32)
+            Pn, ps = cache["k"].shape[0], cache["k"].shape[1]
+            nbl = pt.shape[1]
+            trash = Pn - 1
+            if impl == "pallas_paged":
+                if S != 1:
+                    raise ValueError(
+                        "attn_impl='pallas_paged' is the single-token "
+                        "decode kernel; suffix prefill uses the jnp "
+                        "gather path (attn_impl='paged')")
+                win = jnp.asarray(0 if window is None else window,
+                                  jnp.int32)
+                o, ck, cv = kernel_ops.paged_decode_attention_fused(
+                    q[:, 0], cache["k"], cache["v"],
+                    k[:, 0].astype(cache["k"].dtype),
+                    v[:, 0].astype(cache["v"].dtype),
+                    pt, cp, win, logit_cap=cfg.attn_softcap)
+                out = o[:, None]
+            else:
+                # jnp gather path (= the kernel's parity oracle): scatter
+                # this step's S rows through the page table, gather each
+                # row's pages into a linear (B, nb*ps) cache, attend with
+                # per-row positions.  cp (B,) is each row's FIRST write
+                # position (suffix start; decode is the S == 1 case).
+                wp = cp[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+                valid = jnp.ones((B, S), bool) if kv_write_mask is None \
+                    else jnp.asarray(kv_write_mask, bool)
+                valid &= wp < nbl * ps
+                rows = jnp.arange(B)[:, None]
+                page = jnp.where(
+                    valid,
+                    pt[rows, jnp.clip(wp // ps, 0, nbl - 1)], trash)
+                rowi = wp % ps
+                ck = cache["k"].at[page, rowi].set(
+                    k.astype(cache["k"].dtype))
+                cv = cache["v"].at[page, rowi].set(
+                    v.astype(cache["v"].dtype))
+                lin_shape = (B, nbl * ps) + cache["k"].shape[2:]
+                lin_k = ck[pt].reshape(lin_shape)
+                lin_v = cv[pt].reshape(lin_shape)
+                if S == 1:
+                    out = decode_attention(q, lin_k, lin_v, pos=cp,
+                                           window=window,
+                                           logit_cap=cfg.attn_softcap)
+                else:
+                    out = paged_suffix_attention(
+                        q, lin_k, lin_v, q_pos=wp, window=window,
+                        logit_cap=cfg.attn_softcap)
+            y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return y, {"k": ck, "v": cv}
         if impl == "pallas_decode":
             # Pallas hot path: the KV scatter happens INSIDE the kernel
             # launch (aliased cache blocks), replacing the separate
@@ -359,6 +452,24 @@ def cache_defs(cfg: ModelConfig, batch: int, max_len: int,
     K, hd = cfg.num_kv_heads, cfg.head_dim
     shape = (layers, batch, max_len, K, hd)
     axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamDef(shape, axes, init="zeros"),
+        "v": ParamDef(shape, axes, init="zeros"),
+    }
+
+
+def paged_cache_defs(cfg: ModelConfig, num_pages: int, page_size: int,
+                     layers: int) -> ParamDefs:
+    """Paged KV pool ParamDefs (stacked over layers; DESIGN.md §15).
+
+    One physical pool per layer, ``(num_pages, page_size, K, hd)``;
+    slots address it through per-slot page tables held by the serve
+    engine.  ``num_pages`` INCLUDES the reserved trailing TRASH page
+    (index ``num_pages - 1``) that absorbs masked writes.
+    """
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (layers, num_pages, page_size, K, hd)
+    axes = ("layers", "kv_pages", "kv_page_rows", "kv_heads", "head_dim")
     return {
         "k": ParamDef(shape, axes, init="zeros"),
         "v": ParamDef(shape, axes, init="zeros"),

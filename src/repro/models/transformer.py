@@ -173,6 +173,17 @@ def cache_param_defs(cfg: ModelConfig, batch: int, max_len: int) -> ParamDefs:
     return attn_mod.cache_defs(cfg, batch, max_len, cfg.num_layers)
 
 
+def paged_cache_param_defs(cfg: ModelConfig, num_pages: int,
+                           page_size: int) -> ParamDefs:
+    """Paged-pool KV cache defs (dense/moe/vlm serve; DESIGN.md §15)."""
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        raise ValueError(
+            f"paged KV serving not supported for family '{cfg.family}' "
+            "(recurrent state / ring buffers are not paged)")
+    return attn_mod.paged_cache_defs(cfg, num_pages, page_size,
+                                     cfg.num_layers)
+
+
 # ---------------------------------------------------------------------------
 # forward passes
 # ---------------------------------------------------------------------------
@@ -188,7 +199,8 @@ def _maybe_remat(fn, cfg: ModelConfig, mode: str):
 
 
 def _decoder_layer(cfg: ModelConfig, p: Params, x, *, positions, window,
-                   cache=None, cache_pos=None, return_kv=False, impl):
+                   cache=None, cache_pos=None, return_kv=False, impl,
+                   page_table=None, kv_write_mask=None):
     """Dense/MoE/VLM/SSM layer body. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     x = constrain(x, _ACT)
@@ -200,7 +212,8 @@ def _decoder_layer(cfg: ModelConfig, p: Params, x, *, positions, window,
     h, new_cache = attn_mod.attention_block(
         cfg, subtree(p, "attn"), rms_norm(x, p["ln1/g"]),
         positions=positions, window=window, cache=cache,
-        cache_pos=cache_pos, return_kv=return_kv, impl=impl)
+        cache_pos=cache_pos, return_kv=return_kv, impl=impl,
+        page_table=page_table, kv_write_mask=kv_write_mask)
     x = constrain(x + h, _ACT)
     z = rms_norm(x, p["ln2/g"])
     if cfg.is_moe:
@@ -238,6 +251,8 @@ def decoder_forward(
     cache_pos=None,                     # decode: scalar position
     vision_embeds: Optional[jax.Array] = None,
     attn_impl: str = "chunked",
+    page_table=None,                    # paged serve: (B, nb) int32
+    kv_write_mask=None,                 # paged suffix prefill: (B, S) bool
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (logits, new_cache, aux_loss).
 
@@ -249,12 +264,20 @@ def decoder_forward(
     blocked decode kernel with the fused in-launch KV scatter
     (kernels.decode_attention; per-layer windows ride through the layer
     scan as traced scalars); the default jnp path is its parity oracle.
+
+    With ``page_table`` set, ``cache`` is the per-layer physical page
+    pool and vector ``cache_pos`` holds each row's FIRST write position;
+    ``S > 1`` is the paged *suffix prefill* (positions ``cache_pos[b] +
+    s``, writes masked by ``kv_write_mask``), ``S == 1`` the paged
+    decode tick, ``attn_impl="pallas_paged"`` its Pallas kernel
+    (DESIGN.md §15).
     """
     B, S = tokens.shape
     x = _embed(cfg, params, tokens, vision_embeds)
     if mode == "decode":
         if cache_pos is not None and jnp.ndim(cache_pos) >= 1:
-            positions = jnp.asarray(cache_pos, jnp.int32)[:, None]  # (B, 1)
+            positions = (jnp.asarray(cache_pos, jnp.int32)[:, None]
+                         + jnp.arange(S, dtype=jnp.int32)[None, :])  # (B, S)
         else:
             positions = jnp.full((1,), cache_pos, jnp.int32)
     else:
@@ -288,12 +311,15 @@ def decoder_forward(
             x, (ck, cv, auxs) = jax.lax.scan(body, x, (blocks, windows))
             return (_unembed(cfg, params, x), {"k": ck, "v": cv}, auxs.sum())
 
-        # decode
+        # decode (page_table/kv_write_mask are layer-invariant: closed
+        # over, not scanned — the per-layer pool slices are)
         def body(xc, xs):
             lp, w, k_l, v_l = xs
             y, kv, _ = _decoder_layer(cfg, lp, xc, positions=positions,
                                       window=w, cache={"k": k_l, "v": v_l},
-                                      cache_pos=cache_pos, impl=attn_impl)
+                                      cache_pos=cache_pos, impl=attn_impl,
+                                      page_table=page_table,
+                                      kv_write_mask=kv_write_mask)
             return y, (kv["k"], kv["v"])
         x, (ck, cv) = jax.lax.scan(body, x, (blocks, windows, cache["k"],
                                              cache["v"]))
@@ -311,7 +337,8 @@ def decoder_forward(
             return _decoder_layer(
                 cfg, lp_, x_, positions=positions, window=w, cache=c,
                 cache_pos=cache_pos, return_kv=(mode == "prefill"),
-                impl=attn_impl)
+                impl=attn_impl, page_table=page_table,
+                kv_write_mask=kv_write_mask)
 
         x, kv, aux = _maybe_remat(layer_fn, cfg, mode)(lp, x)
         aux_total += aux

@@ -1,16 +1,19 @@
-from repro.serve.engine import (Engine, EngineReference, Request,
-                                engine_reference)
+from repro.serve.engine import (Engine, EngineReference, PagedEngine,
+                                Request, engine_reference)
+from repro.serve.paged import PagePool, RadixTree, pages_for
 from repro.serve.telemetry import (Tracer, latency_summary, percentile,
                                    request_latency, summarize,
                                    validate_chrome_trace)
 from repro.serve.workload import (lognormal_lengths, mixed_requests,
                                   poisson_arrivals, poisson_requests,
                                   run_arrivals, run_staggered,
-                                  staggered_groups)
+                                  shared_prefix_requests, staggered_groups)
 
-__all__ = ["Engine", "EngineReference", "Request", "engine_reference",
+__all__ = ["Engine", "EngineReference", "PagedEngine", "Request",
+           "engine_reference",
+           "PagePool", "RadixTree", "pages_for",
            "Tracer", "latency_summary", "percentile", "request_latency",
            "summarize", "validate_chrome_trace",
            "lognormal_lengths", "mixed_requests", "poisson_arrivals",
            "poisson_requests", "run_arrivals", "run_staggered",
-           "staggered_groups"]
+           "shared_prefix_requests", "staggered_groups"]

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serve.paged import PagePool, RadixTree, pages_for
 
 
 @dataclasses.dataclass
@@ -175,12 +176,15 @@ class Engine:
     """
 
     DECODE_ATTN_IMPLS = ("xla", "pallas_decode")
+    SAMPLE_IMPLS = ("xla", "pallas")
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  eos_id: Optional[int] = None, seed: int = 0,
                  ticks_per_sync: int = 8, record_traffic: bool = True,
                  prefill_attn_impl: str = "naive",
-                 attn_impl: str = "xla", tracer=None):
+                 attn_impl: str = "xla", tracer=None,
+                 sample_impl: str = "xla",
+                 charge_prefill_ticks: bool = False):
         if not model.supports_batched_serve:
             raise ValueError(
                 f"family {model.cfg.family!r} is not supported by the fused "
@@ -207,6 +211,18 @@ class Engine:
             raise ValueError(
                 f"attn_impl {attn_impl!r} not in {self.DECODE_ATTN_IMPLS}")
         self.attn_impl = attn_impl
+        # token sampling: "xla" = argmax + jax.random.categorical (the
+        # parity oracle), "pallas" = one-launch fused kernel
+        # (kernels/sampling.py; greedy rows bitwise == argmax)
+        if sample_impl not in self.SAMPLE_IMPLS:
+            raise ValueError(
+                f"sample_impl {sample_impl!r} not in {self.SAMPLE_IMPLS}")
+        self.sample_impl = sample_impl
+        # opt-in tick-domain prefill accounting: each admission charges
+        # ceil(prefilled_tokens / slots) ticks BEFORE stamping the admitted
+        # requests, so tick-domain TTFT reflects prompt-processing cost
+        # (benchmarks enable it on both legs to expose prefix-sharing wins)
+        self.charge_prefill_ticks = bool(charge_prefill_ticks)
         # optional serve.telemetry.Tracer: records prefill / decode-window
         # / host-drain spans for chrome://tracing export (DESIGN.md §14)
         self.tracer = tracer
@@ -219,9 +235,13 @@ class Engine:
         self.reset()
 
     # ---- state ----------------------------------------------------------
+    def _fresh_cache(self):
+        """Cache buffers for ``reset`` (PagedEngine swaps in page pools)."""
+        return self.model.init_cache(self.slots, self.max_len)
+
     def reset(self, seed: Optional[int] = None) -> None:
         """Clear cache, slot state, and queue (compiled fns are kept)."""
-        self.cache = self.model.init_cache(self.slots, self.max_len)
+        self.cache = self._fresh_cache()
         self.key = jax.random.PRNGKey(self.seed if seed is None else seed)
         self.slot_req: List[Optional[Request]] = [None] * self.slots
         self._queue: Deque[Request] = collections.deque()
@@ -236,19 +256,34 @@ class Engine:
         self._counts = {"decode_ticks": 0, "prefill_calls": {}}
 
     # ---- device programs ------------------------------------------------
-    def _window(self, params, cache, state, key):
+    def _sample_batch(self, lg, temps, sub):
+        """Traced sampling dispatch: the two-step XLA path or the fused
+        one-launch Pallas kernel (greedy rows bitwise-equal; temperature
+        rows same distribution, different draw — kernels/sampling.py)."""
+        if self.sample_impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.fused_sample(lg, temps, sub)
+        return _sample_tokens(lg, temps, sub)
+
+    def _decode_kwargs(self, extra) -> dict:
+        """Extra ``decode_step`` kwargs built from ``_extra_window_args``
+        operands (PagedEngine threads its page table through here)."""
+        return {}
+
+    def _window(self, params, cache, state, key, *extra):
         """K fused engine ticks: decode + sample + terminate + mask."""
         eos_id, max_len = self.eos_id, self.max_len
+        decode_kw = self._decode_kwargs(extra)
 
         def tick(carry, _):
             cache, last, pos, active, remaining, temps, key = carry
             safe_pos = jnp.clip(pos, 0, max_len - 1)
             logits, cache = self.model.decode_step(
                 params, cache, {"tokens": last[:, None]}, safe_pos,
-                attn_impl=self._decode_attn_impl)
+                attn_impl=self._decode_attn_impl, **decode_kw)
             lg = logits[:, -1].astype(jnp.float32)
             key, sub = jax.random.split(key)
-            tok = _sample_tokens(lg, temps, sub)
+            tok = self._sample_batch(lg, temps, sub)
             fin = (remaining - 1 <= 0) | (pos + 1 >= max_len)
             if eos_id is not None:
                 fin = fin | (tok == eos_id)
@@ -299,7 +334,7 @@ class Engine:
         last_lg = jnp.take_along_axis(
             logits, idx[:, None, None], axis=1)[:, 0].astype(jnp.float32)
         key, sub = jax.random.split(key)
-        t0 = _sample_tokens(last_lg, temps_in, sub)
+        t0 = self._sample_batch(last_lg, temps_in, sub)
         done0 = (max_new - 1 <= 0) | (lens >= self.max_len)
         if self.eos_id is not None:
             done0 = done0 | (t0 == self.eos_id)
@@ -374,14 +409,30 @@ class Engine:
             self.tracer.span(f"prefill P={P}", "prefill", t_launch, now,
                              args={"tick": self.ticks, "admitted": take,
                                    "padded_len": P})
+        if self.charge_prefill_ticks:
+            self.ticks += -(-int(lens.sum()) // self.slots)
         for s, r in pairs:
             self.slot_req[s] = r
             r._mark_admitted(self.ticks, now)
             r.output.append(int(t0[s]))
             if done0[s]:
                 r._mark_done(self.ticks, now)
+                self._release_slot(s)
                 self.slot_req[s] = None
         return take
+
+    def _release_slot(self, s: int) -> None:
+        """Hook called when slot ``s``'s request finishes, just before the
+        slot frees (PagedEngine returns the slot's page references)."""
+
+    def _pre_window(self) -> None:
+        """Hook called right before a decode window launches (PagedEngine
+        uploads a dirty page table and measures page sharing)."""
+
+    def _extra_window_args(self) -> tuple:
+        """Extra device operands for ``_window`` (PagedEngine: the page
+        table)."""
+        return ()
 
     # ---- engine loop ----------------------------------------------------
     def step(self) -> int:
@@ -391,13 +442,15 @@ class Engine:
         n_active = sum(r is not None for r in self.slot_req)
         if n_active == 0:
             return 0
+        self._pre_window()
+        extra = self._extra_window_args()
         if self._traffic["decode"] is None and self.record_traffic:
             self._traffic["decode"] = self._analyze(
                 self._window_jit, self.params, self.cache, self._state,
-                self.key)
+                self.key, *extra)
         t_launch = time.perf_counter()
         self.cache, self._state, self.key, toks, fins = self._window_jit(
-            self.params, self.cache, self._state, self.key)
+            self.params, self.cache, self._state, self.key, *extra)
         toks, fins = np.asarray(toks), np.asarray(fins)   # ONE host sync
         now = time.perf_counter()   # window results observed on the host
         self._counts["decode_ticks"] += self.ticks_per_sync
@@ -412,6 +465,7 @@ class Engine:
                     # clock is the drain that surfaced the token (Request
                     # docstring)
                     r._mark_done(self.ticks + t, now)
+                    self._release_slot(s)
                     self.slot_req[s] = None
         if self.tracer is not None:
             t_end = time.perf_counter()
@@ -473,6 +527,336 @@ class Engine:
         from repro.core.crosslayer import analyze_serve
         kw = {} if tier_mb is None else {"tier_mb": tier_mb}
         return analyze_serve(self.serve_records(), **kw)
+
+
+class PagedEngine(Engine):
+    """Paged-KV continuous-batching engine with radix-tree prefix sharing
+    (DESIGN.md §15).
+
+    Device KV lives in per-layer physical page pools of shape
+    ``(num_pages + 1, page_size, K, hd)`` — the trailing page is TRASH,
+    the scatter sink for masked/inactive rows — and every slot carries a
+    ``(nb,)`` row of one shared ``(slots, nb)`` int32 page table
+    (``nb = max_len // page_size``).  Host-side bookkeeping is
+    ``serve/paged.py``: a refcounted ``PagePool`` plus a path-compressed
+    ``RadixTree`` of served prompts pinning the pages that hold their KV.
+
+    Admission walks the tree for the longest stored prefix of each
+    prompt (capped at ``len(prompt) - 1`` so at least one suffix token
+    always prefills and produces t0 logits), maps the shared full pages
+    by bumping refcounts, copy-on-writes the boundary page when the
+    suffix starts mid-page, and reserves the slot's FULL page span
+    ``ceil(min(L + max_new, max_len) / page_size)`` up front — decode
+    never allocates mid-flight.  Only the unshared suffix runs through
+    the (batched, masked) paged prefill; finished prompts insert into
+    the tree so later requests can share them.  When the pool runs
+    short, LRU tree leaves evict; if still short, admission defers to a
+    later sync point (deadlock-free: a lone request needs at most
+    ``nb`` pages and full eviction frees everything).
+
+    Decode runs the same fused K-tick window as ``Engine`` with the page
+    table as an extra operand: ``attn_impl="xla"`` takes the jnp
+    gather path (the parity oracle), ``"pallas_paged"`` the Pallas
+    kernel with the table as a scalar-prefetch operand and fused KV
+    append (kernels/paged_attention.py).  Greedy outputs are bitwise
+    equal to ``Engine``/``EngineReference`` on the same request set
+    (tests/test_paged_cache.py).
+
+    ``serve_records()`` annotates the decode record with the measured
+    ``unique_page_fraction`` — unique physical pages read per window
+    over total mapped page reads — which
+    ``core.crosslayer.analyze_serve`` uses to scale KV traffic: shared
+    pages are one physical working set, so the NVM verdicts see the
+    paged engine's REAL (deduplicated) decode traffic.
+    """
+
+    DECODE_ATTN_IMPLS = ("xla", "pallas_paged")
+
+    def __init__(self, model: Model, params, *, slots: int, max_len: int,
+                 page_size: int = 8, num_pages: Optional[int] = None, **kw):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_len % page_size != 0:
+            raise ValueError(
+                f"max_len {max_len} must be a multiple of page_size "
+                f"{page_size}")
+        self.page_size = int(page_size)
+        self.nb = max_len // self.page_size
+        # default pool = dense capacity (slots x nb); prefix sharing then
+        # strictly lowers pages-in-use.  TRASH is the extra device page at
+        # index num_pages, never managed by the host pool.
+        self.num_pages = int(num_pages) if num_pages is not None \
+            else slots * self.nb
+        if self.num_pages < self.nb:
+            raise ValueError(
+                f"num_pages {self.num_pages} cannot hold one full-length "
+                f"request ({self.nb} pages)")
+        self.trash = self.num_pages
+        super().__init__(model, params, slots=slots, max_len=max_len, **kw)
+        # decode through the paged branch of attention_block: plain jnp
+        # gather under "xla", fused Pallas kernel under "pallas_paged"
+        self._decode_attn_impl = (
+            "pallas_paged" if self.attn_impl == "pallas_paged" else "xla")
+        self._cow_jit = jax.jit(
+            lambda c, src, dst: {
+                k: v.at[:, dst].set(v[:, src]) for k, v in c.items()},
+            donate_argnums=(0,))
+
+    # ---- state ----------------------------------------------------------
+    def _fresh_cache(self):
+        return self.model.init_paged_cache(self.num_pages + 1,
+                                           self.page_size)
+
+    def reset(self, seed: Optional[int] = None) -> None:
+        super().reset(seed)
+        self.pool = PagePool(self.num_pages, self.page_size)
+        self.tree = RadixTree(self.pool)
+        self._slot_pages: List[List[int]] = [[] for _ in range(self.slots)]
+        self._pt_host = np.full((self.slots, self.nb), self.trash, np.int32)
+        self._pt_dev = jnp.asarray(self._pt_host)
+        self._pt_dirty = False
+        self.stats = {"prefix_hits": 0, "prefix_tokens": 0,
+                      "prompt_tokens": 0, "cow_copies": 0, "deferred": 0,
+                      "evicted_pages": 0, "inserted_nodes": 0}
+        self._upf_sum = 0.0
+        self._upf_windows = 0
+
+    def paged_stats(self) -> dict:
+        """Counters + pool gauges for launch printouts and benchmarks."""
+        pt = max(1, self.stats["prompt_tokens"])
+        return {**self.stats,
+                "pages_hwm": self.pool.hwm,
+                "pages_in_use": self.pool.in_use,
+                "free_pages": self.pool.free_pages,
+                "radix_nodes": self.tree.num_nodes,
+                "prefix_hit_rate": self.stats["prefix_tokens"] / pt}
+
+    # ---- window plumbing -------------------------------------------------
+    def _decode_kwargs(self, extra) -> dict:
+        return {"page_table": extra[0]}
+
+    def _extra_window_args(self) -> tuple:
+        return (self._pt_dev,)
+
+    def _pre_window(self) -> None:
+        if self._pt_dirty:
+            self._pt_dev = jnp.asarray(self._pt_host)
+            self._pt_dirty = False
+        # unique-page fraction of this window's decode reads: row b at
+        # position p reads its first ceil((p+1)/ps) mapped pages
+        mapped: List[int] = []
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            pos = len(r.prompt) + len(r.output) - 1
+            n = pages_for(min(pos + 1, self.max_len), self.page_size)
+            mapped.extend(self._pt_host[s, :n].tolist())
+        if mapped:
+            frac = len(set(mapped)) / len(mapped)
+            self._upf_sum += frac
+            self._upf_windows += 1
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "page_gather", "paged", time.perf_counter(),
+                    args={"tick": self.ticks, "mapped": len(mapped),
+                          "unique": len(set(mapped)),
+                          "unique_page_fraction": frac})
+
+    def _release_slot(self, s: int) -> None:
+        for p in self._slot_pages[s]:
+            self.pool.release(p)
+        self._slot_pages[s] = []
+        self._pt_host[s] = self.trash
+        self._pt_dirty = True
+
+    # ---- admission ------------------------------------------------------
+    def _plan(self, req: Request) -> Optional[dict]:
+        """Reserve every page request ``req`` will ever touch, sharing
+        tree-held prefix pages.  Returns None (nothing mutated net) when
+        the pool stays short even after LRU eviction."""
+        ps = self.page_size
+        L = len(req.prompt)
+        # cap the match one token short of the prompt: the suffix must be
+        # non-empty so the admission prefill computes t0 logits
+        matched, shared = self.tree.match(req.prompt[:L - 1])
+        n_full = matched // ps
+        boundary = matched % ps != 0
+        held = shared[:n_full + (1 if boundary else 0)]
+        for p in held:            # pin before eviction can free them
+            self.pool.share(p)
+        total = pages_for(min(L + req.max_new_tokens, self.max_len), ps)
+        need = total - n_full     # boundary page is CoW'd, so it's "new"
+        if self.pool.free_pages < need:
+            self.stats["evicted_pages"] += self.tree.evict(need)
+        new = self.pool.alloc(need)
+        if new is None:
+            for p in held:        # roll back the pins; admission defers
+                self.pool.release(p)
+            return None
+        self.stats["prompt_tokens"] += L
+        self.stats["prefix_tokens"] += matched
+        self.stats["prefix_hits"] += 1 if matched else 0
+        cow = None
+        if boundary:
+            # suffix starts mid-page: private copy of the shared boundary
+            # page (new[0] covers logical page n_full), pin released after
+            # the device copy in _admit
+            cow = (held[n_full], new[0])
+            self.stats["cow_copies"] += 1
+            self.pool.cow_copies += 1
+        return {"matched": matched, "L": L, "cow": cow,
+                "pages": shared[:n_full] + new, "total": total,
+                "boundary_pin": held[n_full] if boundary else None}
+
+    def _admit(self) -> int:
+        free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        pairs = []
+        for s in free:
+            if not self._queue:
+                break
+            plan = self._plan(self._queue[0])
+            if plan is None:      # head-of-line defer until slots release
+                self.stats["deferred"] += 1
+                break
+            pairs.append((s, self._queue.popleft(), plan))
+        if not pairs:
+            return 0
+        t_admit = time.perf_counter()
+        if self.tracer is not None:
+            self.tracer.begin("admit", "prefill", t_admit,
+                              args={"tick": self.ticks,
+                                    "admitted": len(pairs)})
+        # batched CoW device copies, then drop the boundary pins
+        cows = [p["cow"] for _, _, p in pairs if p["cow"] is not None]
+        if cows:
+            srcs, dsts = zip(*cows)
+            self.cache = self._cow_jit(self.cache,
+                                       jnp.asarray(srcs, jnp.int32),
+                                       jnp.asarray(dsts, jnp.int32))
+            for _, _, p in pairs:
+                if p["boundary_pin"] is not None:
+                    self.pool.release(p["boundary_pin"])
+                if self.tracer is not None and p["cow"] is not None:
+                    self.tracer.instant(
+                        "cow_copy", "paged", time.perf_counter(),
+                        args={"src": int(p["cow"][0]),
+                              "dst": int(p["cow"][1])})
+        # page tables: the slot holds one reference per mapped page
+        for s, r, p in pairs:
+            self._slot_pages[s] = list(p["pages"])
+            row = np.full(self.nb, self.trash, np.int32)
+            row[:p["total"]] = p["pages"]
+            self._pt_host[s] = row
+        self._pt_dev = jnp.asarray(self._pt_host)
+        self._pt_dirty = False
+        # batched suffix prefill (only unshared tokens run the model)
+        S = min(self.max_len,
+                _next_pow2(max(p["L"] - p["matched"] for _, _, p in pairs)))
+        tokens = np.zeros((self.slots, S), np.int32)
+        mask = np.zeros((self.slots, S), bool)
+        starts = np.zeros(self.slots, np.int32)
+        suf_lens = np.zeros(self.slots, np.int32)
+        full_lens = np.zeros(self.slots, np.int32)
+        admit = np.zeros(self.slots, bool)
+        max_new = np.ones(self.slots, np.int32)
+        temps = np.zeros(self.slots, np.float32)
+        for s, r, p in pairs:
+            suf = r.prompt[p["matched"]:]
+            tokens[s, :len(suf)] = suf
+            mask[s, :len(suf)] = True
+            starts[s] = p["matched"]
+            suf_lens[s] = len(suf)
+            full_lens[s] = p["L"]
+            admit[s] = True
+            max_new[s] = r.max_new_tokens
+            temps[s] = r.temperature
+        args = (self.params, self.cache, self._state, jnp.asarray(tokens),
+                self._pt_dev, jnp.asarray(starts), jnp.asarray(suf_lens),
+                jnp.asarray(full_lens), jnp.asarray(admit),
+                jnp.asarray(max_new), jnp.asarray(temps), self.key,
+                jnp.asarray(mask))
+        if S not in self._traffic["prefill"]:
+            self._traffic["prefill"][S] = self._analyze(
+                self._prefill_jit, *args)
+        t_launch = time.perf_counter()
+        self.cache, self._state, self.key, t0, done0 = \
+            self._prefill_jit(*args)
+        self._counts["prefill_calls"][S] = \
+            self._counts["prefill_calls"].get(S, 0) + 1
+        t0, done0 = np.asarray(t0), np.asarray(done0)
+        now = time.perf_counter()
+        if self.tracer is not None:
+            self.tracer.span(
+                f"prefill_chunk S={S}", "prefill", t_launch, now,
+                args={"tick": self.ticks, "admitted": len(pairs),
+                      "padded_len": S,
+                      "suffix_tokens": int(suf_lens.sum()),
+                      "shared_tokens": int((full_lens - suf_lens).sum())})
+        if self.charge_prefill_ticks:
+            self.ticks += -(-int(suf_lens.sum()) // self.slots)
+        for s, r, p in pairs:
+            self.slot_req[s] = r
+            r._mark_admitted(self.ticks, now)
+            r.output.append(int(t0[s]))
+            # register the full prompt's pages so later prompts share them
+            # (the tree takes its own references; safe even if this slot
+            # keeps decoding into the boundary page at rows >= L, which
+            # the tree never vouches for)
+            self.stats["inserted_nodes"] += self.tree.insert(
+                r.prompt, p["pages"][:pages_for(p["L"], self.page_size)])
+            if done0[s]:
+                r._mark_done(self.ticks, now)
+                self._release_slot(s)
+                self.slot_req[s] = None
+        if self.tracer is not None:
+            self.tracer.end(time.perf_counter(),
+                            args={"pages_in_use": self.pool.in_use})
+        return len(pairs)
+
+    def _prefill_prog(self, params, cache, state, tokens, pt, starts,
+                      suf_lens, full_lens, admit, max_new, temps_in, key,
+                      mask):
+        """Batched paged SUFFIX prefill: decode-mode forward with S > 1
+        tokens per row starting at each row's ``starts`` (= matched
+        prefix length).  ``mask`` routes every non-suffix write to the
+        TRASH page, so rows mid-decode and the shared prefix pages stay
+        bit-identical; per-row causal masking makes the suffix KV
+        independent of other rows.  Samples t0 from each admitted row's
+        last suffix position."""
+        S = tokens.shape[1]
+        logits, cache = self.model.decode_step(
+            params, cache, {"tokens": tokens}, starts, attn_impl="xla",
+            page_table=pt, kv_write_mask=mask)
+        idx = jnp.clip(suf_lens - 1, 0, S - 1)
+        last_lg = jnp.take_along_axis(
+            logits, idx[:, None, None], axis=1)[:, 0].astype(jnp.float32)
+        key, sub = jax.random.split(key)
+        t0 = self._sample_batch(last_lg, temps_in, sub)
+        done0 = (max_new - 1 <= 0) | (full_lens >= self.max_len)
+        if self.eos_id is not None:
+            done0 = done0 | (t0 == self.eos_id)
+        state = {
+            "last": jnp.where(admit, t0, state["last"]),
+            "pos": jnp.where(admit, full_lens, state["pos"]),
+            "active": jnp.where(admit, ~done0, state["active"]),
+            "remaining": jnp.where(admit, max_new - 1, state["remaining"]),
+            "temps": jnp.where(admit, temps_in, state["temps"]),
+        }
+        return cache, state, key, t0, done0
+
+    # ---- serve-mode NVM verdicts ---------------------------------------
+    def serve_records(self, mesh: Optional[str] = None) -> List[dict]:
+        """Engine records plus the measured ``unique_page_fraction`` on
+        the decode record — ``analyze_serve`` scales KV-bound traffic by
+        it, so the SRAM/STT/SOT verdicts see prefix sharing's traffic
+        reduction (DESIGN.md §15)."""
+        recs = super().serve_records(mesh)
+        upf = (self._upf_sum / self._upf_windows
+               if self._upf_windows else 1.0)
+        for rec in recs:
+            if rec["kind"] == "decode":
+                rec["unique_page_fraction"] = upf
+        return recs
 
 
 class EngineReference:

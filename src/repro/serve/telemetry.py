@@ -116,6 +116,9 @@ def latency_summary(reqs: Iterable[Request],
 # ---- chrome://tracing export ------------------------------------------------
 
 _REQUIRED_BY_PHASE = {"X": ("name", "ts", "dur", "pid", "tid"),
+                      "B": ("name", "ts", "pid", "tid"),
+                      "E": ("ts", "pid", "tid"),
+                      "i": ("name", "ts", "pid"),
                       "C": ("name", "ts", "pid"),
                       "M": ("name", "pid")}
 
@@ -132,6 +135,9 @@ class Tracer:
         self.name = name
         self._spans: List[dict] = []      # (name, cat, t0, t1, tid, args)
         self._counters: List[dict] = []   # (name, values, t, tid)
+        self._nested: List[dict] = []     # "B"/"E" duration events, in order
+        self._instants: List[dict] = []   # "i" point events
+        self._open: List[dict] = []       # begin() stack awaiting end()
 
     def span(self, name: str, cat: str, start_s: float, end_s: float,
              tid: int = 0, args: Optional[dict] = None) -> None:
@@ -140,6 +146,41 @@ class Tracer:
         self._spans.append({"name": name, "cat": cat, "t0": start_s,
                             "t1": end_s, "tid": tid, "args": args or {}})
 
+    # -- nested spans (paged engine: admit > prefill-chunk > CoW ...) --------
+
+    def begin(self, name: str, cat: str, when_s: float, tid: int = 0,
+              args: Optional[dict] = None) -> None:
+        """Open a nested span ("B" phase); close with ``end()``.  Unlike
+        ``span``, begin/end pairs may enclose other spans and instants —
+        the viewer stacks them by arrival order per thread."""
+        ev = {"ph": "B", "name": name, "cat": cat, "t": when_s, "tid": tid,
+              "args": args or {}}
+        self._open.append(ev)
+        self._nested.append(ev)
+
+    def end(self, when_s: float, tid: int = 0,
+            args: Optional[dict] = None) -> None:
+        """Close the innermost open ``begin()`` span ("E" phase)."""
+        if not self._open:
+            raise ValueError("end() without a matching begin()")
+        opened = self._open[-1]
+        if when_s < opened["t"]:
+            # raise BEFORE popping so a rejected end() leaves the span
+            # open instead of orphaning its "B" event in the trace
+            raise ValueError(
+                f"span {opened['name']!r}: end {when_s} < begin "
+                f"{opened['t']}")
+        self._open.pop()
+        self._nested.append({"ph": "E", "name": opened["name"],
+                             "cat": opened["cat"], "t": when_s, "tid": tid,
+                             "args": args or {}})
+
+    def instant(self, name: str, cat: str, when_s: float, tid: int = 0,
+                args: Optional[dict] = None) -> None:
+        """Point-in-time event ("i" phase) — CoW copies, page gathers."""
+        self._instants.append({"name": name, "cat": cat, "t": when_s,
+                               "tid": tid, "args": args or {}})
+
     def counter(self, name: str, values: Dict[str, float], when_s: float,
                 tid: int = 0) -> None:
         self._counters.append({"name": name, "values": dict(values),
@@ -147,10 +188,16 @@ class Tracer:
 
     def _origin(self) -> float:
         times = ([s["t0"] for s in self._spans]
-                 + [c["t"] for c in self._counters])
+                 + [c["t"] for c in self._counters]
+                 + [e["t"] for e in self._nested]
+                 + [e["t"] for e in self._instants])
         return min(times) if times else 0.0
 
     def to_chrome_trace(self) -> dict:
+        if self._open:
+            raise ValueError(
+                f"unclosed begin() spans: "
+                f"{[e['name'] for e in self._open]}")
         origin = self._origin()
         us = lambda t: (t - origin) * 1e6   # noqa: E731
         events: List[dict] = [
@@ -163,6 +210,14 @@ class Tracer:
             events.append({"ph": "X", "name": s["name"], "cat": s["cat"],
                            "ts": us(s["t0"]), "dur": us(s["t1"]) - us(s["t0"]),
                            "pid": 0, "tid": s["tid"], "args": s["args"]})
+        for e in self._nested:   # emitted in call order (B/E pairing)
+            events.append({"ph": e["ph"], "name": e["name"], "cat": e["cat"],
+                           "ts": us(e["t"]), "pid": 0, "tid": e["tid"],
+                           "args": e["args"]})
+        for e in self._instants:
+            events.append({"ph": "i", "name": e["name"], "cat": e["cat"],
+                           "ts": us(e["t"]), "pid": 0, "tid": e["tid"],
+                           "s": "t", "args": e["args"]})
         for c in self._counters:
             events.append({"ph": "C", "name": c["name"], "ts": us(c["t"]),
                            "pid": 0, "tid": c["tid"], "args": c["values"]})
@@ -180,13 +235,15 @@ class Tracer:
 def validate_chrome_trace(obj: dict) -> None:
     """Raise ValueError unless ``obj`` is structurally valid Trace Event
     JSON (the subset this exporter emits): a ``traceEvents`` list whose
-    events carry a known ``ph``, the per-phase required keys, and
-    non-negative numeric ``ts``/``dur``."""
+    events carry a known ``ph``, the per-phase required keys,
+    non-negative numeric ``ts``/``dur``, and balanced "B"/"E" nesting
+    per (pid, tid) track in list order."""
     if not isinstance(obj, dict) or "traceEvents" not in obj:
         raise ValueError("trace must be a dict with a 'traceEvents' list")
     events = obj["traceEvents"]
     if not isinstance(events, list):
         raise ValueError("'traceEvents' must be a list")
+    depth: Dict[tuple, int] = {}
     for i, ev in enumerate(events):
         ph = ev.get("ph")
         if ph not in _REQUIRED_BY_PHASE:
@@ -199,3 +256,14 @@ def validate_chrome_trace(obj: dict) -> None:
                             or ev[k] < 0):
                 raise ValueError(f"event {i}: {k}={ev[k]!r} must be a "
                                  "non-negative number")
+        if ph in ("B", "E"):
+            track = (ev.get("pid"), ev.get("tid"))
+            d = depth.get(track, 0) + (1 if ph == "B" else -1)
+            if d < 0:
+                raise ValueError(
+                    f"event {i}: 'E' without a matching 'B' on track "
+                    f"{track}")
+            depth[track] = d
+    open_tracks = {t: d for t, d in depth.items() if d}
+    if open_tracks:
+        raise ValueError(f"unbalanced 'B' spans left open: {open_tracks}")

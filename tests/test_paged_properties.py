@@ -1,0 +1,121 @@
+"""Hypothesis property tests for the paged KV cache's host bookkeeping
+(serve/paged.py): exact refcount conservation between the pool, the
+radix tree, and slot holders under random admit/release/evict
+interleavings; no page double-allocation; eviction completeness.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.paged import PagePool, RadixTree, pages_for
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_refcounts_exactly_conserved_under_random_ops(data):
+    """Random interleaving of admit-style (match + share + alloc +
+    insert), slot release, and LRU eviction: at every step the pool's
+    refcounts equal tree-held + slot-held references exactly, no page is
+    double-allocated, and the free list stays consistent."""
+    ps = data.draw(st.sampled_from([2, 4]))
+    pool = PagePool(48, ps)
+    tree = RadixTree(pool)
+    slot_refs: Counter = Counter()
+    held_groups = []
+    for _ in range(data.draw(st.integers(5, 30))):
+        op = data.draw(st.sampled_from(["admit", "admit", "release",
+                                        "evict"]))
+        if op == "admit":
+            prompt = data.draw(st.lists(st.integers(0, 3), min_size=1,
+                                        max_size=14))
+            matched, shared = tree.match(prompt[:len(prompt) - 1])
+            n_full = matched // ps
+            for p in shared[:n_full]:
+                pool.share(p)
+            live_before = {p for g in held_groups for p in g}
+            live_before |= set(tree.held_refs())
+            new = pool.alloc(pages_for(len(prompt), ps) - n_full)
+            if new is None:
+                for p in shared[:n_full]:
+                    pool.release(p)
+            else:
+                # no double-allocation: fresh pages were not live
+                assert not (set(new) & live_before)
+                pages = shared[:n_full] + new
+                tree.insert(prompt, pages)
+                held_groups.append(pages)
+                slot_refs.update(pages)
+        elif op == "release" and held_groups:
+            g = held_groups.pop(
+                data.draw(st.integers(0, len(held_groups) - 1)))
+            for p in g:
+                pool.release(p)
+            slot_refs.subtract(g)
+        elif op == "evict":
+            tree.evict(data.draw(st.integers(0, 48)))
+        pool.check(tree.held_refs() + slot_refs)
+    tree.clear()
+    for g in held_groups:
+        for p in g:
+            pool.release(p)
+    pool.check(Counter())
+    assert pool.free_pages == pool.num_pages
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_eviction_frees_everything_when_unpinned(seed):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(32, 4)
+    tree = RadixTree(pool)
+    for _ in range(6):
+        n = int(rng.integers(1, 12))
+        prompt = [int(t) for t in rng.integers(0, 4, size=n)]
+        pages = pool.alloc(pages_for(len(prompt), 4))
+        if pages is None:
+            break
+        tree.insert(prompt, pages)
+        for p in pages:               # hand the "slot" refs straight back
+            pool.release(p)
+    tree.evict(pool.num_pages)        # nothing pinned -> all pages free
+    assert pool.free_pages == pool.num_pages
+    pool.check(Counter())
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_match_returns_true_prefix_with_exact_page_cover(seed):
+    rng = np.random.default_rng(seed)
+    ps = int(rng.choice([2, 4]))
+    pool = PagePool(64, ps)
+    tree = RadixTree(pool)
+    stored = []
+    for _ in range(5):
+        n = int(rng.integers(1, 14))
+        prompt = tuple(int(t) for t in rng.integers(0, 3, size=n))
+        pages = pool.alloc(pages_for(len(prompt), ps))
+        if pages is None:
+            break
+        tree.insert(prompt, pages)
+        stored.append(prompt)
+        for p in pages:
+            pool.release(p)
+    probe = tuple(int(t) for t in rng.integers(0, 3, size=10))
+    matched, pages = tree.match(probe)
+    best = max((len(_common(s, probe)) for s in stored), default=0)
+    assert matched == best
+    assert len(pages) == pages_for(matched, ps)
+    pool.check(tree.held_refs())
+
+
+def _common(a, b):
+    out = []
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        out.append(x)
+    return out

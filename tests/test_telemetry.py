@@ -156,3 +156,54 @@ def test_validate_chrome_trace_rejects_malformed():
         validate_chrome_trace({"traceEvents": [
             {"ph": "X", "name": "a", "ts": -1.0, "dur": 1.0,
              "pid": 0, "tid": 0}]})
+
+
+# --- nested begin/end spans + instants (paged-engine tracing) ---------------
+
+
+def test_tracer_nested_spans_and_instants(tmp_path):
+    tr = Tracer(name="t")
+    tr.begin("admit", "serve", 10.0, args={"n": 2})
+    tr.begin("prefill_chunk S=8", "serve", 10.1)
+    tr.instant("cow_copy", "serve", 10.15, args={"pairs": 1})
+    tr.end(10.3)
+    tr.instant("page_gather", "serve", 10.35, args={"upf": 0.5})
+    tr.end(10.4, args={"pages_in_use": 7})
+    trace = tr.to_chrome_trace()
+    validate_chrome_trace(trace)
+    bs = [e for e in trace["traceEvents"] if e["ph"] == "B"]
+    es = [e for e in trace["traceEvents"] if e["ph"] == "E"]
+    ins = [e for e in trace["traceEvents"] if e["ph"] == "i"]
+    assert [e["name"] for e in bs] == ["admit", "prefill_chunk S=8"]
+    assert len(es) == 2
+    # E events close innermost-first: prefill end (10.3) precedes admit
+    # end (10.4) in call order, and end() args ride on the E event
+    assert es[0]["ts"] < es[1]["ts"]
+    assert es[1]["args"] == {"pages_in_use": 7}
+    assert [e["name"] for e in ins] == ["cow_copy", "page_gather"]
+    assert all(e["s"] == "t" for e in ins)
+    path = tr.save(tmp_path / "nested.json")
+    validate_chrome_trace(json.loads(path.read_text()))
+
+
+def test_tracer_begin_end_misuse_rejected():
+    tr = Tracer()
+    with pytest.raises(ValueError, match="without"):
+        tr.end(1.0)
+    tr.begin("a", "c", 2.0)
+    with pytest.raises(ValueError, match="< begin"):
+        tr.end(1.0)          # end earlier than its begin: span stays open
+    with pytest.raises(ValueError, match="unclosed"):
+        tr.to_chrome_trace()  # "a" still open
+    tr.end(3.0)
+    validate_chrome_trace(tr.to_chrome_trace())
+
+
+def test_validate_chrome_trace_rejects_unbalanced_spans():
+    base = {"name": "a", "cat": "c", "ts": 0.0, "pid": 0, "tid": 0}
+    with pytest.raises(ValueError, match="E"):
+        validate_chrome_trace(
+            {"traceEvents": [{**base, "ph": "E"}]})
+    with pytest.raises(ValueError, match="unbalanced|unclosed"):
+        validate_chrome_trace(
+            {"traceEvents": [{**base, "ph": "B"}]})
