@@ -24,6 +24,7 @@ MODULES = [
     "cachesim_ladder",
     "traffic_engine",
     "serve_engine",
+    "serve_resilience",
     "train_engine",
     "kernels_micro",
     "crosslayer_tpu",

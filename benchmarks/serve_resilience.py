@@ -1,0 +1,393 @@
+"""Chaos harness: fault-injection scenarios over BOTH serve engines.
+
+Every scenario builds a seeded ``FaultPlan`` (serve/chaos.py) or injects
+a driver-level fault (malformed submits, a mid-run crash + rebuild),
+drives the dense ``Engine`` and the ``PagedEngine`` through it, and then
+asserts the DESIGN.md §16 invariants:
+
+  * termination  — ``run()`` returns and every submitted request reaches
+    exactly one terminal state (DONE / SHED / TIMED_OUT / FAILED); the
+    engines' stall guard advances the tick clock when chaos starves the
+    pool, so there is no schedule that deadlocks the loop
+  * parity       — requests the faults did not kill finish with greedy
+    tokens BITWISE equal to a clean ``EngineReference`` run of the same
+    workload (quarantine/preempt/crash resume from the already-emitted
+    prefix, and greedy decoding is scheduling-independent); TIMED_OUT
+    partial outputs must be strict prefixes of the reference answer
+  * conservation — after ``plan.release_held()`` the paged pool's
+    refcounts equal tree-held + slot-held references EXACTLY
+    (``PagePool.check``), even though chaos stole pages mid-run
+  * bounded shed — under an overloaded Poisson/burst arrival schedule
+    with deadlines and a queue-depth cap, the engine sheds SOME work
+    (admission control is real) but completes at least a floor fraction
+
+Fault sites exercised per engine (>= 6 distinct on BOTH engines):
+``submit.malformed`` and ``submit.oversized`` (driver-level soft-fail),
+``nan_logits``, ``kv_corrupt``, ``window_stall`` (watchdog retry AND
+sticky degrade-to-eager), ``engine.crash`` (rebuild + resubmit of every
+non-terminal request, mid-slot ones included); the paged engine adds
+``pool_exhaust`` and ``cow_storm``.
+
+The verdict lands in ``BENCH_serve.json`` as a ``leg="chaos"`` record
+whose gated ``speedup`` metric is 1.0 when every invariant held and 0.0
+otherwise — benchmarks/gate.py's ratchet (tolerance 0.35) then fails CI
+on any chaos regression.  The record is appended BEFORE the harness
+raises, so a red run still leaves its evidence in the history.
+
+Run: PYTHONPATH=src python -m benchmarks.serve_resilience [--no-reduced]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import Counter
+from datetime import datetime, timezone
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import append_bench_record, emit
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serve import (DONE, FAILED, SHED, TIMED_OUT, Engine,
+                         EngineReference, Fault, FaultPlan, PagedEngine,
+                         Request, ShedPolicy, WindowWatchdog,
+                         mixed_requests, poisson_requests, run_arrivals)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+ARCH = "llama3-8b"
+SLOTS = 3
+MAX_LEN = 48
+K = 4                        # ticks_per_sync: small so faults land mid-flight
+PAGE_SIZE = 4
+VOCAB = 512
+MAX_TICKS = 6000
+MIN_FAULT_SITES = 6          # ISSUE floor: distinct sites per engine
+
+# bounded-shed scenario: deliberate overload (arrivals far outpace the
+# 3 slots) with deadlines + a queue cap — admission control must shed
+# SOME work but still complete at least DONE_FLOOR of the offered load
+BURST_RATE = 1.5
+BURST_AMP = 0.6
+BURST_DEADLINE = 80.0
+BURST_QUEUE_DEPTH = 4
+SHED_BOUND = 0.8             # <= 80% of requests may be shed/timed out
+DONE_FLOOR = 0.2             # >= 20% must finish DONE under overload
+
+
+def _workload(n: int, seed: int, max_new=(3, 8)):
+    return mixed_requests(n, seed=seed, vocab=VOCAB,
+                          prompt_lens=(2, 12), max_new=max_new)
+
+
+def _fresh(eng, *, plan=None, policy=None, watchdog=None):
+    """Reset + rebind the per-scenario resilience knobs (reset() keeps
+    shed_policy/watchdog/fault_plan, so scenarios restore defaults)."""
+    eng.reset()
+    eng.fault_plan = plan
+    eng.shed_policy = policy if policy is not None else ShedPolicy()
+    eng.watchdog = (watchdog if watchdog is not None
+                    else WindowWatchdog(backoff_s=0.001))
+    return eng
+
+
+def _drive(eng, reqs, max_ticks=MAX_TICKS):
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=max_ticks)
+    return reqs
+
+
+def _states(reqs) -> dict:
+    return dict(Counter(r.state for r in reqs))
+
+
+def _check_terminal(name: str, reqs, failures) -> None:
+    stuck = sorted(r.uid for r in reqs if not r.terminal)
+    if stuck:
+        failures.append(f"{name}: requests {stuck} never reached a "
+                        f"terminal state ({_states(reqs)})")
+
+
+def _check_parity(name: str, reqs, ref_out, failures) -> None:
+    """DONE outputs must be bitwise equal to the clean reference run;
+    TIMED_OUT partials must be prefixes of it (quarantine/preempt/crash
+    resume re-derives the same greedy tokens)."""
+    for r in reqs:
+        if r.uid not in ref_out:
+            continue             # driver-injected malformed request
+        want = ref_out[r.uid]
+        got = list(r.output)
+        if r.state == DONE and got != want:
+            failures.append(f"{name}: uid {r.uid} DONE output diverges "
+                            f"from reference ({got} != {want})")
+        elif r.state in (TIMED_OUT, SHED) and got != want[:len(got)]:
+            failures.append(f"{name}: uid {r.uid} {r.state} partial "
+                            f"output is not a reference prefix")
+
+
+def _check_conservation(name: str, eng, plan, failures) -> None:
+    """Exact page-refcount conservation: pool refs == tree + slots (+
+    nothing, once the plan returns its stolen pages)."""
+    if not hasattr(eng, "pool"):
+        return                   # dense engine has no page pool
+    if plan is not None:
+        plan.release_held()
+    slot_refs: Counter = Counter()
+    for s, r in enumerate(eng.slot_req):
+        if r is not None:
+            slot_refs.update(eng._slot_pages[s])
+    try:
+        eng.pool.check(eng.tree.held_refs() + slot_refs)
+    except AssertionError as e:
+        failures.append(f"{name}: page refcount conservation violated "
+                        f"({e})")
+
+
+# ---- scenarios ----------------------------------------------------------
+
+def _scn_submit_malformed(eng, label, ref_out, n, failures, sites):
+    """Driver-level faults: malformed and oversized submits must soft-
+    fail as FAILED (with a reason) while the engine keeps serving."""
+    name = f"{label}/submit_malformed"
+    sites.update(["submit.malformed", "submit.oversized"])
+    _fresh(eng)
+    bad = [Request(uid=900, prompt=[], max_new_tokens=3),
+           Request(uid=901, prompt=[1] * (MAX_LEN + 8), max_new_tokens=3),
+           Request(uid=902, prompt=[1, 2], max_new_tokens=0)]
+    accepted = [eng.submit(b) for b in bad]
+    reqs = _drive(eng, _workload(n, seed=0))
+    if any(accepted):
+        failures.append(f"{name}: a malformed request was accepted")
+    for b in bad:
+        if b.state != FAILED or not b.reason:
+            failures.append(f"{name}: uid {b.uid} should be FAILED with "
+                            f"a reason, got {b.state} ({b.reason!r})")
+    if eng.resilience_stats()["failed"] < len(bad):
+        failures.append(f"{name}: failed counter did not record the "
+                        "malformed submits")
+    _check_terminal(name, reqs, failures)
+    _check_parity(name, reqs, ref_out, failures)
+    _check_conservation(name, eng, None, failures)
+    return {"scenario": name, "states": _states(reqs)}
+
+
+def _scn_fault_plan(eng, label, ref_out, n, failures, sites, *, kind,
+                    fault, watchdog=None, policy=None, expect=()):
+    """Shared body for FaultPlan scenarios: run, then invariants plus
+    per-kind expectations over resilience/paged stats."""
+    name = f"{label}/{kind}"
+    sites.add(kind)
+    plan = FaultPlan([fault] if isinstance(fault, Fault) else fault,
+                     seed=11)
+    _fresh(eng, plan=plan, watchdog=watchdog, policy=policy)
+    reqs = _drive(eng, _workload(n, seed=0))
+    if not plan.injected:
+        failures.append(f"{name}: plan fired no faults "
+                        f"(visits {dict(plan.visits)})")
+    rs = eng.resilience_stats()
+    st = eng.paged_stats() if hasattr(eng, "paged_stats") else {}
+    for key, floor in expect:
+        have = int(rs.get(key, st.get(key, 0)))
+        if have < floor:
+            failures.append(f"{name}: expected {key} >= {floor}, "
+                            f"got {have} (stats {rs})")
+    _check_terminal(name, reqs, failures)
+    _check_parity(name, reqs, ref_out, failures)
+    _check_conservation(name, eng, plan, failures)
+    return {"scenario": name, "injected": dict(plan.injected),
+            "states": _states(reqs), "stats": rs}
+
+
+def _scn_crash_rebuild(eng, label, ref_out, n, failures, sites):
+    """Mid-run crash: run two windows, drop the device state on the
+    floor (reset == rebuilt engine: fresh cache/state, empty queue),
+    resubmit every non-terminal request — mid-slot ones resume from
+    their emitted prefix — and finish with bitwise parity."""
+    name = f"{label}/engine.crash"
+    sites.add("engine.crash")
+    reqs = _workload(n, seed=5, max_new=(6, 12))
+    _fresh(eng)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    eng.step()                   # crash point: some requests mid-decode
+    survivors = [r for r in reqs if not r.terminal]
+    in_flight = [r for r in survivors if r.output]
+    _fresh(eng)                  # the rebuilt engine
+    for r in survivors:
+        eng.submit(r)
+    eng.run(max_ticks=MAX_TICKS)
+    if not survivors:
+        failures.append(f"{name}: nothing survived the crash point — "
+                        "scenario lost its teeth (shrink K or grow "
+                        "max_new)")
+    _check_terminal(name, reqs, failures)
+    _check_parity(name, reqs, ref_out, failures)
+    _check_conservation(name, eng, None, failures)
+    return {"scenario": name, "states": _states(reqs),
+            "resubmitted": len(survivors), "mid_slot": len(in_flight)}
+
+
+def _scn_burst_shed(eng, label, n_traffic, failures):
+    """Overloaded Poisson/burst arrivals + deadlines + queue cap: the
+    run must terminate with every request terminal, shed SOME load, keep
+    the shed+timeout rate under SHED_BOUND, and finish >= DONE_FLOOR."""
+    name = f"{label}/burst_shed"
+    pol = ShedPolicy(max_queue_depth=BURST_QUEUE_DEPTH)
+    _fresh(eng, policy=pol)
+    reqs = poisson_requests(n_traffic, seed=7, vocab=VOCAB,
+                            arrival_rate=BURST_RATE, burst_amp=BURST_AMP,
+                            prompt_bounds=(2, 10), new_bounds=(2, 8),
+                            deadline_ticks=BURST_DEADLINE)
+    run_arrivals(eng, reqs, max_ticks=MAX_TICKS)   # strict: raises on hang
+    states = _states(reqs)
+    done = states.get(DONE, 0)
+    shed = states.get(SHED, 0) + states.get(TIMED_OUT, 0)
+    if shed == 0:
+        failures.append(f"{name}: overload shed nothing — admission "
+                        f"control is not engaging ({states})")
+    if shed / len(reqs) > SHED_BOUND:
+        failures.append(f"{name}: shed rate {shed}/{len(reqs)} above the "
+                        f"{SHED_BOUND:.0%} bound ({states})")
+    if done / len(reqs) < DONE_FLOOR:
+        failures.append(f"{name}: only {done}/{len(reqs)} completed "
+                        f"under overload (floor {DONE_FLOOR:.0%})")
+    _check_terminal(name, reqs, failures)
+    _check_conservation(name, eng, None, failures)
+    return {"scenario": name, "states": states,
+            "shed_rate": shed / len(reqs)}
+
+
+# ---- driver -------------------------------------------------------------
+
+def _reference_outputs(ref, reqs_factory) -> dict:
+    """Clean greedy outputs for a workload factory, keyed by uid."""
+    ref.reset()
+    reqs = reqs_factory()
+    for r in reqs:
+        ref.submit(r)
+    left = ref.run(max_ticks=MAX_TICKS)
+    assert left == 0, "reference run did not complete"
+    return {r.uid: list(r.output) for r in reqs}
+
+
+def _run_engine(eng, label, refs, n, n_traffic, failures, scenarios):
+    sites: set = set()
+    w_retry = WindowWatchdog(max_attempts=3, backoff_s=0.001)
+    scenarios.append(_scn_submit_malformed(
+        eng, label, refs["mixed"], n, failures, sites))
+    scenarios.append(_scn_fault_plan(
+        eng, label, refs["mixed"], n, failures, sites,
+        kind="nan_logits", fault=Fault("nan_logits", at=1),
+        expect=[("quarantined", 1), ("retried", 1)]))
+    scenarios.append(_scn_fault_plan(
+        eng, label, refs["mixed"], n, failures, sites,
+        kind="kv_corrupt", fault=Fault("kv_corrupt", at=1),
+        expect=([("quarantined", 1), ("tree_flushes", 1)]
+                if hasattr(eng, "pool") else [("quarantined", 1)])))
+    scenarios.append(_scn_fault_plan(
+        eng, label, refs["mixed"], n, failures, sites,
+        kind="window_stall", watchdog=w_retry,
+        fault=Fault("window_stall", at=1, count=2),
+        expect=[("window_retries", 2)]))
+    # same kind, other exit: every attempt stalls -> sticky degrade to
+    # the eager window; parity must STILL hold on the fallback path
+    deg = _scn_fault_plan(
+        eng, label, refs["mixed"], n, failures, sites,
+        kind="window_stall", watchdog=w_retry,
+        fault=Fault("window_stall", at=1, count=3),
+        expect=[("window_fallbacks", 1)])
+    deg["scenario"] = f"{label}/window_stall_degrade"
+    if not deg["stats"].get("degraded"):
+        failures.append(f"{label}/window_stall_degrade: engine did not "
+                        "report degraded mode after watchdog exhaustion")
+    scenarios.append(deg)
+    if hasattr(eng, "pool"):
+        scenarios.append(_scn_fault_plan(
+            eng, label, refs["mixed"], n, failures, sites,
+            kind="pool_exhaust",
+            fault=Fault("pool_exhaust", at=0, count=2, hold=2),
+            expect=[("deferred", 1)]))
+        scenarios.append(_scn_fault_plan(
+            eng, label, refs["mixed"], n, failures, sites,
+            kind="cow_storm",
+            fault=Fault("cow_storm", at=1, count=2, pages=2),
+            expect=[("cow_copies", 2)]))
+    scenarios.append(_scn_crash_rebuild(
+        eng, label, refs["crash"], n, failures, sites))
+    scenarios.append(_scn_burst_shed(eng, label, n_traffic, failures))
+    if len(sites) < MIN_FAULT_SITES:
+        failures.append(f"{label}: only {len(sites)} distinct fault "
+                        f"sites exercised ({sorted(sites)}); floor is "
+                        f"{MIN_FAULT_SITES}")
+    return sorted(sites)
+
+
+def run(reduced_mode: bool = True):
+    n = 6 if reduced_mode else 12
+    n_traffic = 24 if reduced_mode else 48
+    cfg = reduced(get_config(ARCH), dtype="float32")
+    model = build_model(cfg, max_seq=MAX_LEN)
+    params = model.init(jax.random.PRNGKey(0))
+
+    ref = EngineReference(model, params, slots=SLOTS, max_len=MAX_LEN)
+    refs = {
+        "mixed": _reference_outputs(ref, lambda: _workload(n, seed=0)),
+        "crash": _reference_outputs(
+            ref, lambda: _workload(n, seed=5, max_new=(6, 12))),
+    }
+
+    failures: list = []
+    scenarios: list = []
+    t0 = time.perf_counter()
+    dense = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                   ticks_per_sync=K, record_traffic=False)
+    dense_sites = _run_engine(dense, "dense", refs, n, n_traffic,
+                              failures, scenarios)
+    paged = PagedEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        page_size=PAGE_SIZE, ticks_per_sync=K,
+                        record_traffic=False)
+    paged_sites = _run_engine(paged, "paged", refs, n, n_traffic,
+                              failures, scenarios)
+    wall_s = time.perf_counter() - t0
+
+    record = {
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "grid": (f"{len(scenarios)} chaos scenarios x {n} reqs on "
+                 f"{SLOTS} slots, max_len {MAX_LEN}, K={K}, page_size "
+                 f"{PAGE_SIZE} ({ARCH} reduced)"),
+        "leg": "chaos",
+        "wall_s": wall_s,
+        "fault_sites": {"dense": dense_sites, "paged": paged_sites},
+        "scenarios": scenarios,
+        # the GATED metric: 1.0 = every invariant held, 0.0 = chaos
+        # found a violation; gate.py's 0.35 tolerance then fails CI on
+        # ANY chaos regression (a boolean wearing the ratchet's schema)
+        "speedup": 1.0 if not failures else 0.0,
+        "speedup_domain": "invariants",
+        "failures": list(failures),
+    }
+    append_bench_record(BENCH_PATH, record)
+    emit("serve_resilience", wall_s * 1e6,
+         f"{len(scenarios)} scenarios, sites dense={len(dense_sites)} "
+         f"paged={len(paged_sites)}, invariants="
+         f"{'ok' if not failures else 'VIOLATED'} -> {BENCH_PATH.name}")
+    if failures:
+        raise AssertionError("; ".join(failures))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="smoke-sized chaos sweep (--no-reduced doubles "
+                         "the workload)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(reduced_mode=args.reduced)
+
+
+if __name__ == "__main__":
+    main()

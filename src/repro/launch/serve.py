@@ -22,8 +22,16 @@ chrome://tracing JSON of the engine's prefill calls, decode windows, and
 host drains.  After every run the launcher prints the engine's
 serve-mode NVM verdicts: SRAM vs STT/SOT-MRAM energy/EDP on the measured
 decode-tick and prefill traffic.
+
+Resilience plumbing (DESIGN.md §16): ``--deadline-ticks`` gives every
+arrival-driven request an absolute deadline and ``--max-queue-depth``
+caps the admission queue (excess submissions shed).  Every run prints a
+terminal-state histogram next to the paged-stats line, and ``--strict``
+(default on) exits non-zero if any request ended FAILED or never
+reached a terminal state — the CI smokes lean on that exit code.
 """
 import argparse
+import collections
 import time
 
 import jax
@@ -31,10 +39,10 @@ import jax
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.launch.mesh import mesh_context
 from repro.models import build_model
-from repro.serve import (Engine, PagedEngine, Tracer, latency_summary,
-                         mixed_requests, poisson_requests, run_arrivals,
-                         run_staggered, shared_prefix_requests,
-                         staggered_groups)
+from repro.serve import (FAILED, Engine, PagedEngine, ShedPolicy, Tracer,
+                         latency_summary, mixed_requests, poisson_requests,
+                         run_arrivals, run_staggered,
+                         shared_prefix_requests, staggered_groups)
 from repro.sharding import default_rules, tree_shardings
 from repro.train.elastic import remesh
 
@@ -47,6 +55,26 @@ def _print_latency(summary: dict) -> None:
             line = " ".join(f"{k} {v * scale:.2f}{unit}"
                             for k, v in stats.items() if k != "max")
             print(f"  {domain:5s} {metric:7s} {line}")
+
+
+def _terminal_report(eng, reqs, strict: bool) -> None:
+    """Terminal-state histogram + strict-mode exit code: FAILED or
+    non-terminal requests are a launcher failure, shed/timed-out are
+    legitimate admission-control outcomes (reported, not fatal)."""
+    hist = collections.Counter(r.state for r in reqs)
+    rs = eng.resilience_stats()
+    extras = {k: v for k, v in rs.items()
+              if v and k not in ("shed", "timed_out", "failed")}
+    print(f"terminal states: "
+          + " ".join(f"{k}={v}" for k, v in sorted(hist.items()))
+          + (f"  resilience: {extras}" if extras else ""))
+    stuck = [r.uid for r in reqs if not r.terminal]
+    failed = [r.uid for r in reqs if r.state == FAILED]
+    if strict and (stuck or failed):
+        raise SystemExit(
+            f"strict mode: {len(stuck)} non-terminal {stuck[:8]} / "
+            f"{len(failed)} FAILED {failed[:8]} requests "
+            f"(states: {dict(hist)})")
 
 
 def main():
@@ -102,6 +130,17 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verdicts", action=argparse.BooleanOptionalAction,
                     default=True, help="print serve-mode NVM verdicts")
+    ap.add_argument("--deadline-ticks", type=float, default=None,
+                    help="per-request deadline in ticks past arrival "
+                         "(arrival-driven runs only); overdue work is "
+                         "shed or timed out instead of served late")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="admission queue cap: submissions beyond it are "
+                         "shed (backpressure instead of unbounded queue)")
+    ap.add_argument("--strict", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="exit non-zero if any request ends FAILED or "
+                         "non-terminal (--no-strict to just report)")
     args = ap.parse_args()
 
     mesh = remesh(jax.device_count())
@@ -117,6 +156,7 @@ def main():
         p_sh = tree_shardings(model.param_axes(), params, mesh, rules)
         params = jax.tree.map(jax.device_put, params, p_sh)
         paged = args.attn_impl in ("paged", "pallas_paged")
+        policy = ShedPolicy(max_queue_depth=args.max_queue_depth)
         if paged:
             eng = PagedEngine(
                 model, params, slots=args.slots, max_len=args.max_len,
@@ -124,7 +164,7 @@ def main():
                 seed=args.seed, ticks_per_sync=args.ticks_per_sync,
                 record_traffic=args.verdicts, sample_impl=args.sample_impl,
                 attn_impl=("pallas_paged" if args.attn_impl == "pallas_paged"
-                           else "xla"), tracer=tracer)
+                           else "xla"), tracer=tracer, shed_policy=policy)
         elif args.shared_prefix:
             raise SystemExit("--shared-prefix requires a paged engine "
                              "(--attn-impl paged or pallas_paged)")
@@ -134,7 +174,8 @@ def main():
                          ticks_per_sync=args.ticks_per_sync,
                          record_traffic=args.verdicts,
                          sample_impl=args.sample_impl,
-                         attn_impl=args.attn_impl, tracer=tracer)
+                         attn_impl=args.attn_impl, tracer=tracer,
+                         shed_policy=policy)
         temp_every = 2 if args.temperature > 0 else 0
         t0 = time.time()
         if args.shared_prefix:
@@ -157,7 +198,8 @@ def main():
                 prompt_bounds=(2, max(2, args.max_len // 4)),
                 new_bounds=(1, max(2, args.max_len // 8)),
                 temperature=args.temperature,
-                temperature_every=temp_every)
+                temperature_every=temp_every,
+                deadline_ticks=args.deadline_ticks)
             outputs = run_arrivals(eng, reqs)
         else:
             reqs = mixed_requests(
@@ -187,11 +229,19 @@ def main():
             raise SystemExit(
                 "shared-prefix workload produced ZERO prefix hits — "
                 "radix-tree sharing is broken")
+    _terminal_report(eng, reqs, args.strict)
     if args.arrival_rate > 0 and not args.shared_prefix:
         summary = latency_summary(reqs)
         _print_latency(summary)
-        if (summary["completed"] != args.requests or not summary["wall"]
-                or not summary["ticks"]):
+        # with admission control engaged (deadlines or a queue cap),
+        # shed / timed-out outcomes are legitimate — all-terminal is
+        # enforced by _terminal_report; without it, anything short of
+        # full completion is a regression
+        shedding = (args.deadline_ticks is not None
+                    or args.max_queue_depth is not None)
+        complete = (summary["completed"] == args.requests
+                    or (shedding and summary["completed"] > 0))
+        if not complete or not summary["wall"] or not summary["ticks"]:
             raise SystemExit(
                 f"latency percentiles empty or incomplete: "
                 f"{summary['completed']}/{args.requests} requests finished")

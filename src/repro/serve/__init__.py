@@ -1,6 +1,12 @@
+from repro.serve.chaos import Fault, FaultPlan, InjectedFault
 from repro.serve.engine import (Engine, EngineReference, PagedEngine,
                                 Request, engine_reference)
-from repro.serve.paged import PagePool, RadixTree, pages_for
+from repro.serve.paged import (PagePool, PagePoolExhausted, RadixTree,
+                               pages_for)
+from repro.serve.resilience import (DONE, FAILED, PENDING, QUEUED, RUNNING,
+                                    SHED, TERMINAL_STATES, TIMED_OUT,
+                                    ShedPolicy, WatchdogError,
+                                    WindowWatchdog)
 from repro.serve.telemetry import (Tracer, latency_summary, percentile,
                                    request_latency, summarize,
                                    validate_chrome_trace)
@@ -11,7 +17,11 @@ from repro.serve.workload import (lognormal_lengths, mixed_requests,
 
 __all__ = ["Engine", "EngineReference", "PagedEngine", "Request",
            "engine_reference",
-           "PagePool", "RadixTree", "pages_for",
+           "PagePool", "PagePoolExhausted", "RadixTree", "pages_for",
+           "Fault", "FaultPlan", "InjectedFault",
+           "DONE", "FAILED", "PENDING", "QUEUED", "RUNNING", "SHED",
+           "TERMINAL_STATES", "TIMED_OUT",
+           "ShedPolicy", "WatchdogError", "WindowWatchdog",
            "Tracer", "latency_summary", "percentile", "request_latency",
            "summarize", "validate_chrome_trace",
            "lognormal_lengths", "mixed_requests", "poisson_arrivals",

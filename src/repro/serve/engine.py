@@ -46,7 +46,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
-from repro.serve.paged import PagePool, RadixTree, pages_for
+from repro.serve.paged import (PagePool, PagePoolExhausted, RadixTree,
+                               pages_for)
+from repro.serve.resilience import (DONE, FAILED, PENDING, QUEUED, RUNNING,
+                                    SHED, TERMINAL_STATES, TIMED_OUT,
+                                    ShedPolicy, WindowWatchdog)
 
 
 @dataclasses.dataclass
@@ -79,6 +83,30 @@ class Request:
     ``arrival`` is the intended arrival time in ticks for traffic-
     generator workloads (``serve/workload.py``); tick-domain latencies
     are measured from it when set, else from ``submit_tick``.
+
+    Terminal-state semantics (canonical; DESIGN.md §16).  ``state``
+    walks ``PENDING -> QUEUED -> RUNNING`` and ends in EXACTLY one of:
+
+      * ``DONE`` — served to completion.  The only state that sets
+        ``done=True``; ``output`` is the full bitwise-deterministic
+        greedy answer.
+      * ``SHED`` — rejected by admission control: queue-depth
+        backpressure at submit, or page-pool defers past
+        ``ShedPolicy.max_defers``.  ``output`` is empty.
+      * ``TIMED_OUT`` — ``deadline`` (absolute engine tick) expired
+        while queued (empty output) or mid-decode (``output`` is a
+        prefix of the request's reference output — greedy decoding is
+        schedule-independent, so partial work is still exact).
+      * ``FAILED`` — malformed at submit (``_check_request``) or the
+        health-check quarantine retry budget ran out.
+
+    A terminal request never transitions again (``_finalize`` is
+    idempotent); ``done_tick``/``done_time`` stamp the tick/wall time
+    the terminal state was reached, whatever it was, and ``reason``
+    says why for the non-DONE states.  Requeued work (quarantine
+    retries, preemption, crash-resubmission) resumes from
+    ``prompt + output``: recomputation from a clean prefix is invisible
+    in the final tokens.
     """
     uid: int
     prompt: List[int]
@@ -95,17 +123,44 @@ class Request:
     first_token_tick: Optional[int] = None
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
+    state: str = PENDING
+    reason: Optional[str] = None      # why SHED / TIMED_OUT / FAILED
+    deadline: Optional[float] = None  # absolute engine tick; opt-in
+    retries: int = 0                  # health-check quarantine requeues
+    preemptions: int = 0              # preempt_slot requeues
+    defers: int = 0                   # pool-exhausted admission defers
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
 
     def _mark_admitted(self, tick: int, now: float) -> None:
         """Stamp admission == first-token emission (see class docstring);
-        both engines route through here so the tick domains cannot drift."""
-        self.admit_tick = self.first_token_tick = tick
-        self.admit_time = self.first_token_time = now
+        both engines route through here so the tick domains cannot drift.
+        Stamps only the FIRST admission: a requeued request (retry /
+        preemption) keeps its original TTFT."""
+        self.state = RUNNING
+        if self.admit_tick is None:
+            self.admit_tick = self.first_token_tick = tick
+            self.admit_time = self.first_token_time = now
 
-    def _mark_done(self, tick: int, now: float) -> None:
-        self.done = True
+    def _finalize(self, state: str, tick: int, now: float,
+                  reason: Optional[str] = None) -> None:
+        """Enter a terminal state exactly once (later calls are no-ops).
+        ``done_tick``/``done_time`` stamp the terminal event for every
+        state; ``done`` flips only for DONE so telemetry percentiles
+        keep meaning served-to-completion."""
+        if self.terminal:
+            return
+        self.state = state
+        self.reason = reason
+        if state == DONE:
+            self.done = True
         self.done_tick = tick
         self.done_time = now
+
+    def _mark_done(self, tick: int, now: float) -> None:
+        self._finalize(DONE, tick, now)
 
 
 def _sample_tokens(logits: jax.Array, temps: jax.Array,
@@ -141,6 +196,56 @@ def _unfinished(engine) -> int:
         r is not None for r in engine.slot_req)
 
 
+def _soft_submit(engine, req: Request) -> bool:
+    """Shared submit path: NEVER raises for a bad request.  A malformed
+    request is marked ``FAILED`` with the validation message as its
+    ``reason`` and the engine keeps serving (the caller's loop cannot be
+    wedged by one bad client); queue-depth backpressure sheds instead of
+    queueing unboundedly.  Returns True iff the request was queued."""
+    now = time.perf_counter()
+    try:
+        _check_request(req, engine.max_len)
+    except ValueError as e:
+        req._finalize(FAILED, engine.ticks, now, reason=str(e))
+        engine._rstats["failed"] += 1
+        return False
+    if req.submit_tick is None:
+        req.submit_tick = engine.ticks
+        req.submit_time = now
+    pol = engine.shed_policy
+    if (pol.max_queue_depth is not None
+            and len(engine._queue) >= pol.max_queue_depth):
+        req._finalize(
+            SHED, engine.ticks, now,
+            reason=(f"queue depth {len(engine._queue)} at limit "
+                    f"{pol.max_queue_depth}"))
+        engine._rstats["shed"] += 1
+        return False
+    req.state = QUEUED
+    engine._queue.append(req)
+    return True
+
+
+def _drop_expired(engine) -> None:
+    """Shed queued requests whose deadline already passed — they would
+    only waste prefill work to time out mid-decode anyway."""
+    if not engine._queue or not engine.shed_policy.enforce_deadlines:
+        return
+    keep: Deque[Request] = collections.deque()
+    now = time.perf_counter()
+    while engine._queue:
+        r = engine._queue.popleft()
+        if r.deadline is not None and engine.ticks > r.deadline:
+            r._finalize(
+                TIMED_OUT, engine.ticks, now,
+                reason=(f"deadline {r.deadline:g} expired in queue at "
+                        f"tick {engine.ticks}"))
+            engine._rstats["timed_out"] += 1
+        else:
+            keep.append(r)
+    engine._queue = keep
+
+
 def _drain_until_done(engine, max_ticks: int) -> int:
     """Shared run loop: step until queue + slots are empty or the tick
     budget is spent (both engines share exit semantics by construction).
@@ -159,8 +264,15 @@ def _drain_until_done(engine, max_ticks: int) -> int:
         if engine.ticks - start + k > max_ticks:
             break
         n = engine.step()
-        if n == 0 and not engine._queue:
-            break
+        if n == 0:
+            if not engine._queue:
+                break
+            if engine._last_admitted == 0:
+                # resource stall: no slot active and nothing admissible
+                # (e.g. chaos-held page pool).  Advance the tick clock so
+                # deadlines can expire and the budget check above fires —
+                # run() always terminates instead of spinning forever.
+                engine.ticks += k
     return _unfinished(engine)
 
 
@@ -184,7 +296,10 @@ class Engine:
                  prefill_attn_impl: str = "naive",
                  attn_impl: str = "xla", tracer=None,
                  sample_impl: str = "xla",
-                 charge_prefill_ticks: bool = False):
+                 charge_prefill_ticks: bool = False,
+                 shed_policy: Optional[ShedPolicy] = None,
+                 watchdog: Optional[WindowWatchdog] = None,
+                 fault_plan=None, health_check: bool = True):
         if not model.supports_batched_serve:
             raise ValueError(
                 f"family {model.cfg.family!r} is not supported by the fused "
@@ -226,9 +341,20 @@ class Engine:
         # optional serve.telemetry.Tracer: records prefill / decode-window
         # / host-drain spans for chrome://tracing export (DESIGN.md §14)
         self.tracer = tracer
+        # resilience layer (DESIGN.md §16): admission control, bounded
+        # window retry, per-slot output health checks, and an optional
+        # chaos FaultPlan whose on_site() hooks fire at the named sites
+        self.shed_policy = shed_policy if shed_policy is not None \
+            else ShedPolicy()
+        self.watchdog = watchdog if watchdog is not None else WindowWatchdog()
+        self.fault_plan = fault_plan
+        self.health_check = bool(health_check)
+        self._vocab = int(model.cfg.vocab_size)
         self._decode_attn_impl = (
             "pallas_decode" if attn_impl == "pallas_decode" else "chunked")
         self._window_jit = jax.jit(self._window, donate_argnums=(1, 2))
+        self._deact_jit = jax.jit(
+            lambda st, m: dict(st, active=st["active"] & ~m))
         self._prefill_jit = jax.jit(self._prefill_prog,
                                     donate_argnums=(1, 2))
         self._traffic: Dict[str, object] = {"decode": None, "prefill": {}}
@@ -254,6 +380,12 @@ class Engine:
         }
         self.ticks = 0
         self._counts = {"decode_ticks": 0, "prefill_calls": {}}
+        self._poison_host = np.zeros(self.slots, bool)   # chaos NaN operand
+        self._degraded = False      # sticky eager-window fallback mode
+        self._last_admitted = 0     # run-loop stall detection
+        self._rstats = {"failed": 0, "shed": 0, "timed_out": 0,
+                        "quarantined": 0, "retried": 0, "preempted": 0,
+                        "window_retries": 0, "window_fallbacks": 0}
 
     # ---- device programs ------------------------------------------------
     def _sample_batch(self, lg, temps, sub):
@@ -270,8 +402,15 @@ class Engine:
         operands (PagedEngine threads its page table through here)."""
         return {}
 
-    def _window(self, params, cache, state, key, *extra):
-        """K fused engine ticks: decode + sample + terminate + mask."""
+    def _window(self, params, cache, state, key, poison, *extra):
+        """K fused engine ticks: decode + sample + terminate + mask.
+
+        ``poison`` is a (slots,) bool chaos operand: True rows get their
+        logits replaced with NaN for this window (``jnp.where`` with an
+        all-False mask is a bitwise no-op, so clean runs are unchanged).
+        The per-tick ``ok`` output is the window health check — finite
+        logits per row — that the host drain uses to quarantine only the
+        offending slots (DESIGN.md §16)."""
         eos_id, max_len = self.eos_id, self.max_len
         decode_kw = self._decode_kwargs(extra)
 
@@ -282,6 +421,8 @@ class Engine:
                 params, cache, {"tokens": last[:, None]}, safe_pos,
                 attn_impl=self._decode_attn_impl, **decode_kw)
             lg = logits[:, -1].astype(jnp.float32)
+            lg = jnp.where(poison[:, None], jnp.float32(jnp.nan), lg)
+            ok = jnp.isfinite(lg).all(axis=-1)
             key, sub = jax.random.split(key)
             tok = self._sample_batch(lg, temps, sub)
             fin = (remaining - 1 <= 0) | (pos + 1 >= max_len)
@@ -294,16 +435,16 @@ class Engine:
             remaining = jnp.where(active, remaining - 1, remaining)
             active = active & ~fin
             carry = (cache, last, pos, active, remaining, temps, key)
-            return carry, (emit, fin)
+            return carry, (emit, fin, ok)
 
         carry = (cache, state["last"], state["pos"], state["active"],
                  state["remaining"], state["temps"], key)
-        carry, (toks, fins) = jax.lax.scan(
+        carry, (toks, fins, oks) = jax.lax.scan(
             tick, carry, None, length=self.ticks_per_sync)
         cache, last, pos, active, remaining, temps, key = carry
         state = {"last": last, "pos": pos, "active": active,
                  "remaining": remaining, "temps": temps}
-        return cache, state, key, toks, fins
+        return cache, state, key, toks, fins, oks
 
     def _prefill_prog(self, params, cache, state, tokens, lens, admit,
                       max_new, temps_in, key):
@@ -316,7 +457,11 @@ class Engine:
         exactly.  The same program samples each admitted row's first token
         from its last prompt position's logits, applies the immediate-
         termination rule, and writes the admitted rows of the slot state.
-        Returns (cache, state, key, t0, done0).
+        Returns (cache, state, key, t0, done0, ok0) — ``ok0`` is the
+        admission-time health verdict (finite last-position logits), the
+        prefill leg of the window health check: the paged subclass
+        attends shared / recycled KV pages during prefill, so a
+        corrupted page would otherwise poison t0 unchecked.
         """
         P = tokens.shape[1]
         logits, fresh = self.model.prefill(
@@ -333,6 +478,7 @@ class Engine:
         idx = jnp.clip(lens - 1, 0, P - 1)
         last_lg = jnp.take_along_axis(
             logits, idx[:, None, None], axis=1)[:, 0].astype(jnp.float32)
+        ok0 = jnp.isfinite(last_lg).all(axis=-1)
         key, sub = jax.random.split(key)
         t0 = self._sample_batch(last_lg, temps_in, sub)
         done0 = (max_new - 1 <= 0) | (lens >= self.max_len)
@@ -345,7 +491,7 @@ class Engine:
             "remaining": jnp.where(admit, max_new - 1, state["remaining"]),
             "temps": jnp.where(admit, temps_in, state["temps"]),
         }
-        return cache, state, key, t0, done0
+        return cache, state, key, t0, done0, ok0
 
     # ---- traffic accounting --------------------------------------------
     def _analyze(self, jitted, *args):
@@ -366,31 +512,41 @@ class Engine:
             return None
 
     # ---- admission ------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        _check_request(req, self.max_len)
-        req.submit_tick = self.ticks
-        req.submit_time = time.perf_counter()
-        self._queue.append(req)
+    def submit(self, req: Request) -> bool:
+        """Queue a request; never raises.  Malformed requests finalize as
+        ``FAILED`` (reason on the request), backpressure sheds — see
+        ``_soft_submit``.  Returns True iff queued."""
+        return _soft_submit(self, req)
 
     def _admit(self) -> int:
-        """Admit queued requests into free slots with one batched prefill."""
+        """Admit queued requests into free slots with one batched prefill.
+
+        Requeued requests (quarantine retries, preemptions, crash
+        resubmissions) resume from ``prompt + output``: the effective
+        prompt re-prefills their already-emitted tokens, and the decode
+        budget shrinks by what was already produced — greedy decoding is
+        schedule-independent, so the continuation is bitwise what an
+        uninterrupted run would have emitted."""
+        self._last_admitted = 0
+        _drop_expired(self)
         free = [i for i in range(self.slots) if self.slot_req[i] is None]
         take = min(len(free), len(self._queue))
         if take == 0:
             return 0
         pairs = [(free[i], self._queue.popleft()) for i in range(take)]
+        eff = {s: list(r.prompt) + list(r.output) for s, r in pairs}
         P = min(self.max_len,
-                _next_pow2(max(len(r.prompt) for _, r in pairs)))
+                _next_pow2(max(len(e) for e in eff.values())))
         tokens = np.zeros((self.slots, P), np.int32)
         lens = np.zeros(self.slots, np.int32)
         admit = np.zeros(self.slots, bool)
         max_new = np.ones(self.slots, np.int32)
         temps = np.zeros(self.slots, np.float32)
         for s, r in pairs:
-            tokens[s, :len(r.prompt)] = r.prompt
-            lens[s] = len(r.prompt)
+            tokens[s, :len(eff[s])] = eff[s]
+            lens[s] = len(eff[s])
             admit[s] = True
-            max_new[s] = r.max_new_tokens
+            max_new[s] = r.max_new_tokens - len(r.output)
             temps[s] = r.temperature
         args = (self.params, self.cache, self._state, jnp.asarray(tokens),
                 jnp.asarray(lens), jnp.asarray(admit), jnp.asarray(max_new),
@@ -399,11 +555,11 @@ class Engine:
             self._traffic["prefill"][P] = self._analyze(
                 self._prefill_jit, *args)
         t_launch = time.perf_counter()
-        self.cache, self._state, self.key, t0, done0 = \
+        self.cache, self._state, self.key, t0, done0, ok0 = \
             self._prefill_jit(*args)
         self._counts["prefill_calls"][P] = \
             self._counts["prefill_calls"].get(P, 0) + 1
-        t0, done0 = np.asarray(t0), np.asarray(done0)
+        t0, done0, ok0 = np.asarray(t0), np.asarray(done0), np.asarray(ok0)
         now = time.perf_counter()   # t0/done0 observed on the host
         if self.tracer is not None:
             self.tracer.span(f"prefill P={P}", "prefill", t_launch, now,
@@ -411,14 +567,21 @@ class Engine:
                                    "padded_len": P})
         if self.charge_prefill_ticks:
             self.ticks += -(-int(lens.sum()) // self.slots)
+        bad0: Dict[int, int] = {}
         for s, r in pairs:
             self.slot_req[s] = r
             r._mark_admitted(self.ticks, now)
+            if self.health_check and not ok0[s]:
+                bad0[s] = 0      # poisoned prefill: discard t0, requeue
+                continue
             r.output.append(int(t0[s]))
             if done0[s]:
                 r._mark_done(self.ticks, now)
                 self._release_slot(s)
                 self.slot_req[s] = None
+        self._last_admitted = take
+        if bad0:
+            self._quarantine(bad0, now)
         return take
 
     def _release_slot(self, s: int) -> None:
@@ -434,31 +597,173 @@ class Engine:
         table)."""
         return ()
 
+    # ---- resilience -----------------------------------------------------
+    def _fire_faults(self, site: str) -> None:
+        """Chaos hook: let the attached FaultPlan act at a named site."""
+        if self.fault_plan is not None:
+            self.fault_plan.on_site(site, self)
+
+    def _deactivate_slots(self, slots) -> None:
+        """Clear the device active flag for ``slots`` (quarantine /
+        preemption / mid-decode timeout) without touching other rows."""
+        mask = np.zeros(self.slots, bool)
+        mask[list(slots)] = True
+        self._state = self._deact_jit(self._state, jnp.asarray(mask))
+
+    def _stash_prefix(self, s: int, req: Request) -> None:
+        """Hook before a preempted slot releases: PagedEngine re-inserts
+        the already-written prefix into the radix tree so the requeued
+        request re-admits cheaply."""
+
+    def _after_quarantine(self, n: int) -> None:
+        """Hook after ``n`` slots were quarantined (PagedEngine flushes
+        the radix tree — shared-KV provenance is suspect)."""
+
+    def preempt_slot(self, s: int) -> Request:
+        """Kick the request in slot ``s`` back to the FRONT of the queue,
+        freeing the slot for other work.  The request resumes from
+        ``prompt + output`` on re-admission, so no emitted token is lost
+        and greedy continuations stay bitwise-deterministic."""
+        r = self.slot_req[s]
+        if r is None:
+            raise ValueError(f"slot {s} is not occupied")
+        self._stash_prefix(s, r)
+        self._deactivate_slots([s])
+        self._release_slot(s)
+        self.slot_req[s] = None
+        r.preemptions += 1
+        self._rstats["preempted"] += 1
+        r.state = QUEUED
+        self._queue.appendleft(r)
+        return r
+
+    def resilience_stats(self) -> dict:
+        """Terminal-state / retry / watchdog counters since reset."""
+        return dict(self._rstats, degraded=self._degraded)
+
+    def _launch_window(self, args):
+        """Run the decode window under the watchdog: the jitted window
+        retries with backoff (an injected stall or poisoned compile
+        raises BEFORE the jit call consumes its donated buffers, so the
+        operands stay alive), then degrades to the eager interpreted
+        window — sticky, because a launch path that failed
+        ``max_attempts`` times is not worth re-probing every window."""
+        if self._degraded:
+            return self._window(*args)
+
+        def primary():
+            self._fire_faults("window_launch")
+            return self._window_jit(*args)
+
+        def fallback():
+            self._rstats["window_fallbacks"] += 1
+            self._degraded = True
+            return self._window(*args)
+
+        def on_retry(attempt, err):
+            self._rstats["window_retries"] += 1
+
+        return self.watchdog.call(primary, fallback=fallback,
+                                  label="decode_window", on_retry=on_retry)
+
+    def _quarantine(self, bad: dict, now: float) -> None:
+        """Requeue (or fail) slots whose window output flunked the health
+        check.  Tokens from the bad tick on were already discarded by the
+        drain, so the request's ``output`` is a clean prefix and the
+        retry re-prefills it — recomputed greedy tokens are bitwise
+        identical, so a retried request's final answer matches an
+        unfaulted run."""
+        hit = []
+        for s in sorted(bad):
+            r = self.slot_req[s]
+            if r is None:     # finished on a tick before the fault
+                continue
+            hit.append(s)
+            self._rstats["quarantined"] += 1
+            self._release_slot(s)
+            self.slot_req[s] = None
+            r.retries += 1
+            if r.retries > self.shed_policy.max_retries:
+                r._finalize(
+                    FAILED, self.ticks, now,
+                    reason=(f"window health check failed {r.retries} "
+                            "times (retry budget exhausted)"))
+                self._rstats["failed"] += 1
+            else:
+                self._rstats["retried"] += 1
+                r.state = QUEUED
+                self._queue.appendleft(r)
+        if hit:
+            self._deactivate_slots(hit)
+            self._after_quarantine(len(hit))
+
+    def _expire_running(self, now: float) -> None:
+        """Mid-decode deadline enforcement: release slots whose request
+        ran past its deadline, keeping the partial output (a prefix of
+        the reference answer)."""
+        if not self.shed_policy.enforce_deadlines:
+            return
+        hit = []
+        for s, r in enumerate(self.slot_req):
+            if r is None or r.deadline is None or self.ticks <= r.deadline:
+                continue
+            hit.append(s)
+            self._release_slot(s)
+            self.slot_req[s] = None
+            r._finalize(
+                TIMED_OUT, self.ticks, now,
+                reason=(f"deadline {r.deadline:g} expired mid-decode at "
+                        f"tick {self.ticks}"))
+            self._rstats["timed_out"] += 1
+        if hit:
+            self._deactivate_slots(hit)
+
     # ---- engine loop ----------------------------------------------------
     def step(self) -> int:
         """One sync window: admit + K fused ticks + drain.  Returns the
         number of sequences active during the window."""
+        self._fire_faults("pre_admit")
         self._admit()
         n_active = sum(r is not None for r in self.slot_req)
         if n_active == 0:
             return 0
         self._pre_window()
+        self._fire_faults("pre_window")
+        poison = jnp.asarray(self._poison_host)
         extra = self._extra_window_args()
+        args = (self.params, self.cache, self._state, self.key, poison,
+                *extra)
         if self._traffic["decode"] is None and self.record_traffic:
-            self._traffic["decode"] = self._analyze(
-                self._window_jit, self.params, self.cache, self._state,
-                self.key, *extra)
+            self._traffic["decode"] = self._analyze(self._window_jit, *args)
         t_launch = time.perf_counter()
-        self.cache, self._state, self.key, toks, fins = self._window_jit(
-            self.params, self.cache, self._state, self.key, *extra)
+        self.cache, self._state, self.key, toks, fins, oks = \
+            self._launch_window(args)
+        if self._poison_host.any():
+            self._poison_host[:] = False   # chaos poison is one-shot
         toks, fins = np.asarray(toks), np.asarray(fins)   # ONE host sync
+        oks = np.asarray(oks)
         now = time.perf_counter()   # window results observed on the host
         self._counts["decode_ticks"] += self.ticks_per_sync
+        # window health check: first tick per slot whose emitted token is
+        # untrustworthy (non-finite logits or out-of-vocab sample)
+        bad: Dict[int, int] = {}
+        if self.health_check:
+            for s in range(self.slots):
+                if self.slot_req[s] is None:
+                    continue
+                for t in range(self.ticks_per_sync):
+                    if toks[t, s] < 0:
+                        continue
+                    if not oks[t, s] or toks[t, s] >= self._vocab:
+                        bad[s] = t
+                        break
         for t in range(self.ticks_per_sync):
             for s in range(self.slots):
                 r = self.slot_req[s]
                 if r is None or toks[t, s] < 0:
                     continue
+                if s in bad and t >= bad[s]:
+                    continue    # discard everything from the bad tick on
                 r.output.append(int(toks[t, s]))
                 if fins[t, s]:
                     # tick domain keeps the in-window position; the wall
@@ -478,6 +783,9 @@ class Engine:
             self.tracer.counter("active_slots", {"active": n_active},
                                 t_launch)
         self.ticks += self.ticks_per_sync
+        if bad:
+            self._quarantine(bad, now)
+        self._expire_running(now)
         return n_active
 
     def run(self, max_ticks: int = 10_000) -> int:
@@ -601,6 +909,10 @@ class PagedEngine(Engine):
             lambda c, src, dst: {
                 k: v.at[:, dst].set(v[:, src]) for k, v in c.items()},
             donate_argnums=(0,))
+        self._scrub_jit = jax.jit(
+            lambda c, idx: {
+                k: v.at[:, idx].set(0) for k, v in c.items()},
+            donate_argnums=(0,))
 
     # ---- state ----------------------------------------------------------
     def _fresh_cache(self):
@@ -617,7 +929,9 @@ class PagedEngine(Engine):
         self._pt_dirty = False
         self.stats = {"prefix_hits": 0, "prefix_tokens": 0,
                       "prompt_tokens": 0, "cow_copies": 0, "deferred": 0,
-                      "evicted_pages": 0, "inserted_nodes": 0}
+                      "evicted_pages": 0, "inserted_nodes": 0,
+                      "tree_flushes": 0}
+        self._last_shortage = (0, 0)   # (pages wanted, pages free)
         self._upf_sum = 0.0
         self._upf_windows = 0
 
@@ -669,29 +983,66 @@ class PagedEngine(Engine):
         self._pt_host[s] = self.trash
         self._pt_dirty = True
 
+    # ---- resilience -----------------------------------------------------
+    def _stash_prefix(self, s: int, req: Request) -> None:
+        """Preemption keeps the work: the slot's already-written KV —
+        positions ``[0, L + len(output) - 1)``, i.e. the effective prompt
+        minus the not-yet-written last token — goes into the radix tree
+        under its token string, so the requeued request's next ``_plan``
+        matches it and re-admission prefills only one suffix token."""
+        written = len(req.prompt) + len(req.output) - 1
+        if written < 1:
+            return
+        toks = (list(req.prompt) + list(req.output))[:written]
+        self.stats["inserted_nodes"] += self.tree.insert(
+            toks, self._slot_pages[s][:pages_for(written, self.page_size)])
+
+    def _after_quarantine(self, n: int) -> None:
+        # a health-check failure means some KV content is untrustworthy,
+        # and shared prefix pages could re-poison every retry: flush the
+        # tree (conservative — only costs re-prefill on the next misses)
+        self.stats["tree_flushes"] += 1
+        self.tree.clear()
+        # scrub the now-free pages on device: a recycled page is only
+        # partially overwritten by its next prefill (rows past the new
+        # occupant's length keep old bytes), and corrupt residue there
+        # can leak into attention — zeroing restores the fresh-cache
+        # contract for everything the flush just released
+        free = sorted(self.pool._free)
+        if free:
+            self.cache = self._scrub_jit(
+                self.cache, jnp.asarray(free, jnp.int32))
+
     # ---- admission ------------------------------------------------------
     def _plan(self, req: Request) -> Optional[dict]:
         """Reserve every page request ``req`` will ever touch, sharing
         tree-held prefix pages.  Returns None (nothing mutated net) when
-        the pool stays short even after LRU eviction."""
+        the pool stays short even after LRU eviction — the shortfall is
+        kept in ``_last_shortage`` so the shed path can say how many
+        pages were missing.  Requeued requests plan against their
+        effective prompt ``prompt + output`` (resume, not restart)."""
         ps = self.page_size
-        L = len(req.prompt)
+        prompt = list(req.prompt) + list(req.output)
+        L = len(prompt)
+        remaining = req.max_new_tokens - len(req.output)
         # cap the match one token short of the prompt: the suffix must be
         # non-empty so the admission prefill computes t0 logits
-        matched, shared = self.tree.match(req.prompt[:L - 1])
+        matched, shared = self.tree.match(prompt[:L - 1])
         n_full = matched // ps
         boundary = matched % ps != 0
         held = shared[:n_full + (1 if boundary else 0)]
         for p in held:            # pin before eviction can free them
             self.pool.share(p)
-        total = pages_for(min(L + req.max_new_tokens, self.max_len), ps)
+        total = pages_for(min(L + remaining, self.max_len), ps)
         need = total - n_full     # boundary page is CoW'd, so it's "new"
         if self.pool.free_pages < need:
             self.stats["evicted_pages"] += self.tree.evict(need)
-        new = self.pool.alloc(need)
-        if new is None:
+        try:
+            new = self.pool.alloc(need)
+        except PagePoolExhausted as e:
             for p in held:        # roll back the pins; admission defers
                 self.pool.release(p)
+            self._last_shortage = (e.requested, e.free)
             return None
         self.stats["prompt_tokens"] += L
         self.stats["prefix_tokens"] += matched
@@ -704,21 +1055,44 @@ class PagedEngine(Engine):
             cow = (held[n_full], new[0])
             self.stats["cow_copies"] += 1
             self.pool.cow_copies += 1
-        return {"matched": matched, "L": L, "cow": cow,
+        return {"matched": matched, "L": L, "prompt": prompt, "cow": cow,
                 "pages": shared[:n_full] + new, "total": total,
                 "boundary_pin": held[n_full] if boundary else None}
 
     def _admit(self) -> int:
+        """Paged admission is a shed-or-defer scan, never head-of-line
+        blocking: a request whose page reservation cannot be met steps
+        aside (keeping its queue position) so later requests that DO fit
+        can run, and sheds outright once it has been passed over
+        ``ShedPolicy.max_defers`` times.  Combined with the run-loop
+        stall guard this makes pool exhaustion a latency event, not a
+        deadlock."""
+        self._last_admitted = 0
+        _drop_expired(self)
         free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        pol = self.shed_policy
         pairs = []
-        for s in free:
-            if not self._queue:
-                break
-            plan = self._plan(self._queue[0])
-            if plan is None:      # head-of-line defer until slots release
+        deferred: List[Request] = []
+        while free and self._queue:
+            r = self._queue.popleft()
+            plan = self._plan(r)
+            if plan is None:
                 self.stats["deferred"] += 1
-                break
-            pairs.append((s, self._queue.popleft(), plan))
+                r.defers += 1
+                if pol.max_defers is not None and r.defers > pol.max_defers:
+                    want, have = self._last_shortage
+                    r._finalize(
+                        SHED, self.ticks, time.perf_counter(),
+                        reason=(f"page pool exhausted on {r.defers} "
+                                f"admission attempts (last shortfall: "
+                                f"wanted {want} pages, {have} free)"))
+                    self._rstats["shed"] += 1
+                else:
+                    deferred.append(r)
+                continue
+            pairs.append((free.pop(0), r, plan))
+        for r in reversed(deferred):
+            self._queue.appendleft(r)
         if not pairs:
             return 0
         t_admit = time.perf_counter()
@@ -761,14 +1135,14 @@ class PagedEngine(Engine):
         max_new = np.ones(self.slots, np.int32)
         temps = np.zeros(self.slots, np.float32)
         for s, r, p in pairs:
-            suf = r.prompt[p["matched"]:]
+            suf = p["prompt"][p["matched"]:]
             tokens[s, :len(suf)] = suf
             mask[s, :len(suf)] = True
             starts[s] = p["matched"]
             suf_lens[s] = len(suf)
             full_lens[s] = p["L"]
             admit[s] = True
-            max_new[s] = r.max_new_tokens
+            max_new[s] = r.max_new_tokens - len(r.output)
             temps[s] = r.temperature
         args = (self.params, self.cache, self._state, jnp.asarray(tokens),
                 self._pt_dev, jnp.asarray(starts), jnp.asarray(suf_lens),
@@ -779,11 +1153,11 @@ class PagedEngine(Engine):
             self._traffic["prefill"][S] = self._analyze(
                 self._prefill_jit, *args)
         t_launch = time.perf_counter()
-        self.cache, self._state, self.key, t0, done0 = \
+        self.cache, self._state, self.key, t0, done0, ok0 = \
             self._prefill_jit(*args)
         self._counts["prefill_calls"][S] = \
             self._counts["prefill_calls"].get(S, 0) + 1
-        t0, done0 = np.asarray(t0), np.asarray(done0)
+        t0, done0, ok0 = np.asarray(t0), np.asarray(done0), np.asarray(ok0)
         now = time.perf_counter()
         if self.tracer is not None:
             self.tracer.span(
@@ -794,16 +1168,23 @@ class PagedEngine(Engine):
                       "shared_tokens": int((full_lens - suf_lens).sum())})
         if self.charge_prefill_ticks:
             self.ticks += -(-int(suf_lens.sum()) // self.slots)
+        bad0: Dict[int, int] = {}
         for s, r, p in pairs:
             self.slot_req[s] = r
             r._mark_admitted(self.ticks, now)
+            if self.health_check and not ok0[s]:
+                # poisoned prefill (a shared or recycled page carried
+                # corrupt KV): discard t0 and requeue via quarantine —
+                # the tree flush + page scrub below cleans the source
+                bad0[s] = 0
+                continue
             r.output.append(int(t0[s]))
-            # register the full prompt's pages so later prompts share them
-            # (the tree takes its own references; safe even if this slot
-            # keeps decoding into the boundary page at rows >= L, which
-            # the tree never vouches for)
+            # register the full effective prompt's pages so later prompts
+            # share them (the tree takes its own references; safe even if
+            # this slot keeps decoding into the boundary page at rows
+            # >= L, which the tree never vouches for)
             self.stats["inserted_nodes"] += self.tree.insert(
-                r.prompt, p["pages"][:pages_for(p["L"], self.page_size)])
+                p["prompt"], p["pages"][:pages_for(p["L"], self.page_size)])
             if done0[s]:
                 r._mark_done(self.ticks, now)
                 self._release_slot(s)
@@ -811,6 +1192,9 @@ class PagedEngine(Engine):
         if self.tracer is not None:
             self.tracer.end(time.perf_counter(),
                             args={"pages_in_use": self.pool.in_use})
+        self._last_admitted = len(pairs)
+        if bad0:
+            self._quarantine(bad0, now)
         return len(pairs)
 
     def _prefill_prog(self, params, cache, state, tokens, pt, starts,
@@ -830,6 +1214,7 @@ class PagedEngine(Engine):
         idx = jnp.clip(suf_lens - 1, 0, S - 1)
         last_lg = jnp.take_along_axis(
             logits, idx[:, None, None], axis=1)[:, 0].astype(jnp.float32)
+        ok0 = jnp.isfinite(last_lg).all(axis=-1)
         key, sub = jax.random.split(key)
         t0 = self._sample_batch(last_lg, temps_in, sub)
         done0 = (max_new - 1 <= 0) | (full_lens >= self.max_len)
@@ -842,7 +1227,7 @@ class PagedEngine(Engine):
             "remaining": jnp.where(admit, max_new - 1, state["remaining"]),
             "temps": jnp.where(admit, temps_in, state["temps"]),
         }
-        return cache, state, key, t0, done0
+        return cache, state, key, t0, done0, ok0
 
     # ---- serve-mode NVM verdicts ---------------------------------------
     def serve_records(self, mesh: Optional[str] = None) -> List[dict]:
@@ -878,7 +1263,8 @@ class EngineReference:
     ticks_per_sync = 1   # per-tick engine: every step is its own window
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 shed_policy: Optional[ShedPolicy] = None):
         if not model.supports_batched_serve:
             # ssm included: recurrent state has no write position, so the
             # write-at-own-pos-before-read isolation argument the KV slots
@@ -894,6 +1280,8 @@ class EngineReference:
         self.max_len = max_len
         self.eos_id = eos_id
         self.seed = seed
+        self.shed_policy = shed_policy if shed_policy is not None \
+            else ShedPolicy()
         self._decode = jax.jit(
             lambda p, c, b, pos: model.decode_step(p, c, b, pos))
         self.reset()
@@ -909,18 +1297,26 @@ class EngineReference:
         self._remaining = np.zeros(self.slots, np.int32)
         self._temps = np.zeros(self.slots, np.float32)
         self.ticks = 0
+        self._last_admitted = 0
+        self._rstats = {"failed": 0, "shed": 0, "timed_out": 0,
+                        "quarantined": 0, "retried": 0, "preempted": 0,
+                        "window_retries": 0, "window_fallbacks": 0}
 
     # ---- admission ------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        _check_request(req, self.max_len)
-        req.submit_tick = self.ticks
-        req.submit_time = time.perf_counter()
-        self._queue.append(req)
+    def submit(self, req: Request) -> bool:
+        """Same soft-fail semantics as ``Engine.submit``."""
+        return _soft_submit(self, req)
+
+    def resilience_stats(self) -> dict:
+        return dict(self._rstats, degraded=False)
 
     def _admit(self) -> None:
+        self._last_admitted = 0
+        _drop_expired(self)
         for i in range(self.slots):
             if self.slot_req[i] is None and self._queue:
                 self._prefill(i, self._queue.popleft())
+                self._last_admitted += 1
 
     def _sample(self, logits_row: np.ndarray, temp: float) -> int:
         if temp > 0:
@@ -930,11 +1326,14 @@ class EngineReference:
         return int(np.argmax(logits_row))
 
     def _prefill(self, slot: int, req: Request) -> None:
-        """Per-token prefill (the seed loop), slot-isolated."""
+        """Per-token prefill (the seed loop), slot-isolated.  Requeued
+        requests (e.g. crash resubmission) resume from their effective
+        prompt ``prompt + output``, mirroring ``Engine._admit``."""
         self.slot_req[slot] = req
+        eff = list(req.prompt) + list(req.output)
         sel = (jnp.arange(self.slots) == slot)
         lg = None
-        for t, tok in enumerate(req.prompt):
+        for t, tok in enumerate(eff):
             toks = self._last.copy()
             toks[slot] = tok
             pos = np.clip(self._pos, 0, self.max_len - 1)
@@ -955,8 +1354,8 @@ class EngineReference:
         req._mark_admitted(self.ticks, time.perf_counter())
         req.output.append(t0)
         self._last[slot] = t0
-        self._pos[slot] = len(req.prompt)
-        self._remaining[slot] = req.max_new_tokens - 1
+        self._pos[slot] = len(eff)
+        self._remaining[slot] = req.max_new_tokens - len(req.output)
         self._temps[slot] = req.temperature
         done = (self._remaining[slot] <= 0
                 or (self.eos_id is not None and t0 == self.eos_id)

@@ -33,6 +33,23 @@ def pages_for(tokens: int, page_size: int) -> int:
     return -(-int(tokens) // int(page_size))
 
 
+class PagePoolExhausted(RuntimeError):
+    """``alloc`` could not satisfy a request; carries the shortfall.
+
+    The engine converts this into a shed-or-defer decision at admission
+    (never head-of-line blocking); the chaos harness injects it on
+    purpose by stealing pages.
+    """
+
+    def __init__(self, requested: int, free: int, num_pages: int):
+        self.requested = int(requested)
+        self.free = int(free)
+        self.num_pages = int(num_pages)
+        super().__init__(
+            f"page pool exhausted: requested {requested} pages, "
+            f"{free} free of {num_pages}")
+
+
 class PagePool:
     """Reference-counted allocator over ``num_pages`` physical pages.
 
@@ -61,12 +78,17 @@ class PagePool:
     def in_use(self) -> int:
         return self.num_pages - len(self._free)
 
-    def alloc(self, n: int) -> list[int] | None:
-        """Claim ``n`` free pages (refcount 1 each) or None if short."""
+    def alloc(self, n: int) -> list[int]:
+        """Claim ``n`` free pages (refcount 1 each).
+
+        Raises ``PagePoolExhausted`` (with requested/free counts) when
+        short — callers that can defer catch it; nothing downstream has
+        to special-case a bare ``None``.
+        """
         if n < 0:
             raise ValueError("cannot allocate a negative page count")
         if len(self._free) < n:
-            return None
+            raise PagePoolExhausted(n, len(self._free), self.num_pages)
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             if self.refcount[p] != 0:

@@ -1,0 +1,137 @@
+"""Resilience primitives for the serve stack (DESIGN.md §16).
+
+Three pieces, all host-side and dependency-free so both engines and the
+chaos harness (serve/chaos.py) can share them:
+
+* **Terminal states.**  Every ``Request`` ends in exactly one of
+  ``DONE / SHED / TIMED_OUT / FAILED`` (the canonical statement of the
+  semantics lives on ``Request`` itself, serve/engine.py).  ``DONE`` is
+  the only state that sets ``Request.done`` — telemetry percentiles keep
+  meaning "served to completion" — while the other three are *served
+  outcomes* too: a shed request was handled (rejected), not lost, so
+  drain loops and ``run_arrivals`` treat any terminal request as
+  finished work.
+
+* **ShedPolicy.**  Deadline-aware admission control with queue-depth
+  backpressure: ``max_queue_depth`` sheds at submit time (the client
+  gets an immediate reject instead of an unbounded queue), deadlines are
+  enforced both while queued (expired requests never admit) and while
+  running (mid-decode timeouts release the slot and keep the partial
+  output), ``max_retries`` bounds health-check quarantine retries, and
+  ``max_defers`` converts page-pool-exhausted admission deferrals into
+  sheds instead of head-of-line blocking forever.
+
+* **WindowWatchdog.**  Bounded retry + exponential backoff around the
+  jitted decode window: a poisoned compile or injected stall retries
+  ``max_attempts`` times and then *degrades* to the eager reference
+  path via the caller's fallback instead of hanging ``run()``.  An
+  optional ``timeout_s`` runs each attempt on a daemon thread and
+  abandons it on expiry (the thread cannot be killed, but the engine
+  stops waiting on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+# ---- terminal states --------------------------------------------------------
+
+PENDING = "PENDING"      # created, not yet submitted
+QUEUED = "QUEUED"        # in an engine's admission queue
+RUNNING = "RUNNING"      # admitted into a slot, decoding
+
+DONE = "DONE"            # served to completion (the only state with done=True)
+SHED = "SHED"            # rejected by admission control (backpressure/defers)
+TIMED_OUT = "TIMED_OUT"  # deadline expired (queued or mid-decode)
+FAILED = "FAILED"        # malformed request or retry budget exhausted
+
+TERMINAL_STATES = frozenset({DONE, SHED, TIMED_OUT, FAILED})
+
+
+@dataclasses.dataclass
+class ShedPolicy:
+    """Admission-control knobs for the serve engines.
+
+    The default policy is permissive — no backpressure, no defer cap —
+    but still honors per-request deadlines (setting ``Request.deadline``
+    is an explicit opt-in) and bounds quarantine retries, so an engine
+    without an explicit policy behaves exactly like the pre-resilience
+    engine on deadline-free traffic.
+    """
+    max_queue_depth: Optional[int] = None   # submit-time backpressure
+    enforce_deadlines: bool = True          # queued AND mid-decode expiry
+    max_retries: int = 2                    # health-check quarantine retries
+    max_defers: Optional[int] = None        # pool-exhausted defers before SHED
+
+
+class WatchdogError(RuntimeError):
+    """Raised when every watchdog attempt failed and no fallback exists."""
+
+
+@dataclasses.dataclass
+class WindowWatchdog:
+    """Bounded retry + backoff wrapper for one hazardous callable.
+
+    ``call`` runs ``primary`` up to ``max_attempts`` times, sleeping
+    ``backoff_s * backoff_factor**attempt`` between failures; when every
+    attempt fails it runs ``fallback`` (the degrade path) or raises
+    ``WatchdogError`` chaining the last error.  With ``timeout_s`` set,
+    each attempt runs on a daemon thread and an attempt that outlives
+    the budget is abandoned and counted as a failure — a stalled device
+    call stops blocking the engine loop even though the thread itself
+    cannot be interrupted.
+    """
+    max_attempts: int = 3
+    backoff_s: float = 0.01
+    backoff_factor: float = 2.0
+    timeout_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff_s < 0 or self.backoff_factor < 1.0:
+            raise ValueError("backoff_s must be >= 0 and factor >= 1")
+
+    def call(self, primary: Callable, fallback: Optional[Callable] = None,
+             label: str = "", on_retry: Optional[Callable] = None):
+        delay = self.backoff_s
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_attempts):
+            try:
+                return self._attempt(primary)
+            except Exception as e:   # noqa: BLE001 - bounded, re-raised below
+                last = e
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                if attempt + 1 < self.max_attempts and delay > 0:
+                    time.sleep(delay)
+                    delay *= self.backoff_factor
+        if fallback is not None:
+            return fallback()
+        raise WatchdogError(
+            f"{label or 'watchdog'}: all {self.max_attempts} attempts "
+            f"failed ({last!r})") from last
+
+    def _attempt(self, fn: Callable):
+        if self.timeout_s is None:
+            return fn()
+        box: dict = {}
+
+        def runner():
+            try:
+                box["value"] = fn()
+            except BaseException as e:   # noqa: BLE001 - re-raised on caller
+                box["error"] = e
+
+        t = threading.Thread(target=runner, daemon=True)
+        t.start()
+        t.join(self.timeout_s)
+        if t.is_alive():
+            raise WatchdogError(
+                f"attempt exceeded timeout {self.timeout_s}s "
+                "(thread abandoned)")
+        if "error" in box:
+            raise box["error"]
+        return box["value"]

@@ -101,8 +101,20 @@ def latency_summary(reqs: Iterable[Request],
     reqs = list(reqs)
     per = [(r, request_latency(r)) for r in reqs]
     finished = [(r, lat) for r, lat in per if lat is not None]
+    states: Dict[str, int] = {}
+    for r in reqs:
+        states[r.state] = states.get(r.state, 0) + 1
     out = {"n": len(reqs), "completed": len(finished),
            "tokens": sum(len(r.output) for r, _ in finished),
+           # terminal-state histogram + degraded-traffic counters
+           # (DESIGN.md §16): shed/timed-out/failed requests count in
+           # ``n`` and ``states`` but never in the percentiles
+           "states": states,
+           "shed": states.get("SHED", 0),
+           "timed_out": states.get("TIMED_OUT", 0),
+           "failed": states.get("FAILED", 0),
+           "retries": sum(r.retries for r in reqs),
+           "preemptions": sum(r.preemptions for r in reqs),
            "wall": {}, "ticks": {}}
     for domain in ("wall", "ticks"):
         keys = sorted({k for _, lat in finished for k in lat[domain]})

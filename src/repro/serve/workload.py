@@ -165,10 +165,14 @@ def poisson_requests(n: int, *, seed: int = 0, vocab: int = 512,
                      new_bounds: Tuple[int, int] = (1, 16),
                      new_log_mean: float = 1.4, new_sigma: float = 0.7,
                      temperature: float = 0.0,
-                     temperature_every: int = 0) -> List[Request]:
+                     temperature_every: int = 0,
+                     deadline_ticks: Optional[float] = None) -> List[Request]:
     """n requests with Poisson/bursty tick-domain arrivals (``.arrival``)
     and lognormal prompt / output-budget lengths.  Seeded and fully
-    reproducible; uids follow arrival order."""
+    reproducible; uids follow arrival order.  ``deadline_ticks`` gives
+    every request an absolute deadline ``arrival + deadline_ticks`` —
+    the engines' ShedPolicy then sheds/time-outs work that cannot meet
+    it (DESIGN.md §16)."""
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(n, rate=arrival_rate, rng=rng,
                                 burst_amp=burst_amp,
@@ -184,7 +188,9 @@ def poisson_requests(n: int, *, seed: int = 0, vocab: int = 512,
                 (i + 1) % temperature_every == 0 else 0.0)
         reqs.append(Request(
             uid=i, prompt=prompt, max_new_tokens=int(nnew[i]),
-            temperature=temp, arrival=float(arrivals[i])))
+            temperature=temp, arrival=float(arrivals[i]),
+            deadline=(None if deadline_ticks is None
+                      else float(arrivals[i]) + float(deadline_ticks))))
     return reqs
 
 
@@ -197,7 +203,10 @@ def run_arrivals(engine, reqs: Sequence[Request],
     at tick 0).  When the engine goes idle before the next arrival, the
     tick clock fast-forwards to it — idle ticks decode nothing but still
     count against ``max_ticks``.  Returns {uid: output tokens}; with
-    ``strict`` (default) raises if anything failed to finish in budget.
+    ``strict`` (default) raises if any request failed to reach a
+    terminal state in budget (shed / timed-out / failed requests ARE
+    terminal: admission control resolving a request is a served
+    outcome, not a hang — DESIGN.md §16).
     """
     order = sorted(reqs, key=lambda r: (r.arrival or 0.0, r.uid))
     pending = collections.deque(order)
@@ -209,7 +218,13 @@ def run_arrivals(engine, reqs: Sequence[Request],
         if engine._queue or any(r is not None for r in engine.slot_req):
             if engine.ticks - start + k > max_ticks:
                 break
-            engine.step()
+            n = engine.step()
+            if (n == 0 and engine._queue
+                    and getattr(engine, "_last_admitted", 1) == 0):
+                # resource stall (nothing active, nothing admissible):
+                # advance the clock so deadlines expire and the budget
+                # check terminates the loop — never spin forever
+                engine.ticks += k
         elif pending:
             nxt = max(engine.ticks, int(math.ceil(pending[0].arrival or 0.0)))
             if nxt - start > max_ticks:
@@ -217,9 +232,11 @@ def run_arrivals(engine, reqs: Sequence[Request],
             engine.ticks = nxt   # idle fast-forward to the next arrival
         else:
             break
-    unfinished = _unfinished(engine) + len(pending)
-    if strict and unfinished:
-        missing = sorted(r.uid for r in reqs if not r.done)
+    stuck = [r for r in reqs if not r.terminal]
+    if strict and stuck:
+        hist = collections.Counter(r.state for r in reqs)
+        missing = sorted(r.uid for r in stuck)
         raise RuntimeError(f"requests {missing} did not finish "
-                           f"within {max_ticks} ticks")
+                           f"within {max_ticks} ticks "
+                           f"(terminal states: {dict(hist)})")
     return {r.uid: list(r.output) for r in reqs if r.done}

@@ -18,7 +18,8 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.kernels import ops, ref
 from repro.models import build_model
-from repro.serve import (EngineReference, PagedEngine, PagePool, RadixTree,
+from repro.serve import (EngineReference, PagedEngine, PagePool,
+                         PagePoolExhausted, RadixTree,
                          Request, mixed_requests, pages_for, run_staggered,
                          shared_prefix_requests, staggered_groups)
 
@@ -62,7 +63,8 @@ def test_pool_alloc_release_cycle():
     pool = PagePool(4, 8)
     a = pool.alloc(3)
     assert sorted(a) == [0, 1, 2] and pool.free_pages == 1
-    assert pool.alloc(2) is None          # short -> None, nothing claimed
+    with pytest.raises(PagePoolExhausted, match="requested 2.*1 free"):
+        pool.alloc(2)                     # short -> raise, nothing claimed
     assert pool.free_pages == 1
     pool.share(a[0])
     pool.release(a[0])

@@ -11,7 +11,8 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.serve.paged import PagePool, RadixTree, pages_for
+from repro.serve.paged import (PagePool, PagePoolExhausted, RadixTree,
+                               pages_for)
 
 
 @given(data=st.data())
@@ -38,7 +39,10 @@ def test_refcounts_exactly_conserved_under_random_ops(data):
                 pool.share(p)
             live_before = {p for g in held_groups for p in g}
             live_before |= set(tree.held_refs())
-            new = pool.alloc(pages_for(len(prompt), ps) - n_full)
+            try:
+                new = pool.alloc(pages_for(len(prompt), ps) - n_full)
+            except PagePoolExhausted:
+                new = None
             if new is None:
                 for p in shared[:n_full]:
                     pool.release(p)
@@ -75,8 +79,9 @@ def test_eviction_frees_everything_when_unpinned(seed):
     for _ in range(6):
         n = int(rng.integers(1, 12))
         prompt = [int(t) for t in rng.integers(0, 4, size=n)]
-        pages = pool.alloc(pages_for(len(prompt), 4))
-        if pages is None:
+        try:
+            pages = pool.alloc(pages_for(len(prompt), 4))
+        except PagePoolExhausted:
             break
         tree.insert(prompt, pages)
         for p in pages:               # hand the "slot" refs straight back
@@ -97,8 +102,9 @@ def test_match_returns_true_prefix_with_exact_page_cover(seed):
     for _ in range(5):
         n = int(rng.integers(1, 14))
         prompt = tuple(int(t) for t in rng.integers(0, 3, size=n))
-        pages = pool.alloc(pages_for(len(prompt), ps))
-        if pages is None:
+        try:
+            pages = pool.alloc(pages_for(len(prompt), ps))
+        except PagePoolExhausted:
             break
         tree.insert(prompt, pages)
         stored.append(prompt)

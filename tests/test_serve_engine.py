@@ -407,16 +407,27 @@ def test_engine_latency_stamps_and_tracer(mp):
 # --- request validation -----------------------------------------------------
 
 
-def test_submit_validation(mp):
+def test_submit_never_raises_marks_failed_and_keeps_serving(mp):
+    """Regression (DESIGN.md §16): a malformed request must NOT raise out
+    of submit and wedge the caller's loop — it finalizes as FAILED with
+    the validation message, and the engine keeps serving healthy work."""
     model, params = mp
     eng = Engine(model, params, slots=1, max_len=8, ticks_per_sync=1,
                  record_traffic=False)
-    with pytest.raises(ValueError, match="empty prompt"):
-        eng.submit(Request(uid=0, prompt=[], max_new_tokens=1))
-    with pytest.raises(ValueError, match="exceeds"):
-        eng.submit(Request(uid=1, prompt=list(range(9)), max_new_tokens=1))
-    with pytest.raises(ValueError, match="max_new_tokens"):
-        eng.submit(Request(uid=2, prompt=[1], max_new_tokens=0))
+    bad = [Request(uid=0, prompt=[], max_new_tokens=1),
+           Request(uid=1, prompt=list(range(9)), max_new_tokens=1),
+           Request(uid=2, prompt=[1], max_new_tokens=0)]
+    for b in bad:
+        assert eng.submit(b) is False
+    assert [b.state for b in bad] == ["FAILED"] * 3
+    assert "empty prompt" in bad[0].reason
+    assert "exceeds" in bad[1].reason
+    assert "max_new_tokens" in bad[2].reason
+    assert len(eng._queue) == 0
+    good = Request(uid=3, prompt=[1, 2, 3], max_new_tokens=3)
+    assert eng.submit(good) is True
+    assert eng.run() == 0 and good.done and good.state == "DONE"
+    assert eng.resilience_stats()["failed"] == 3
 
 
 # --- serve-mode NVM records -------------------------------------------------
