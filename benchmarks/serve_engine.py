@@ -37,6 +37,12 @@ prefix-sharing win itself without wall-clock flake.
 The xla-leg record also carries the engine's serve-mode NVM verdicts —
 the decode-tick SRAM vs STT/SOT energy/EDP ratios from the measured
 traffic (core.crosslayer.analyze_serve), closing the loop to the paper.
+
+Per-family legs (``leg="ssm"/"hybrid"/"encdec"``, ISSUE 10) run the
+slot-bank families — mamba2, recurrentgemma, whisper — through the same
+mixed workload with greedy parity gated at K=1 and K=4, warm tokens/s
+floors, and family-tagged NVM verdicts (recurrent records score under
+their own write-heavier read/write split).
 """
 from __future__ import annotations
 
@@ -90,6 +96,20 @@ CAPACITY_FACTOR = 2          # slots served at equal KV memory
 # floor, and the gated ``speedup`` metric on the shared-prefix leg is
 # the DETERMINISTIC tick-domain TTFT ratio (bit-stable across runs)
 PAGED_WALL_FLOOR = 3.0
+
+# per-family legs (ISSUE 10): each slot-bank family (mamba2 recurrent
+# conv+SSD state, recurrentgemma RG-LRU + local-attention rings, whisper
+# per-row encoder output + decoder KV) serves the same mixed workload
+# through Engine vs EngineReference.  Greedy parity at K=1 AND K=4 is
+# the gated flag; warm tokens/s carries an absolute floor (recurrent
+# prefill is a sequential masked scan, so the speedup floor sits far
+# below the dense legs' — the reference pays the same per-token work
+# PLUS a host round-trip per token).
+FAMILY_ARCHS = (("ssm", "mamba2-1.3b"), ("hybrid", "recurrentgemma-2b"),
+                ("encdec", "whisper-tiny"))
+FAMILY_K = 4
+FAMILY_SPEEDUP_FLOOR = 2.0
+FAMILY_TPS_FLOOR = 200.0     # ~1/4 of the slowest measured leg (encdec ~850)
 
 # poisson_burst leg: heavy-tailed lengths under a bursty arrival process
 N_TRAFFIC = 32
@@ -373,6 +393,89 @@ def _shared_prefix_leg(model, params, ref, failures):
             " KV memory diverged from engine_reference")
 
 
+def _family_legs(failures):
+    """One gated leg per slot-bank family (leg="ssm"/"hybrid"/"encdec"):
+    parity flags at K=1 and K=FAMILY_K, warm tokens/s + speedup floors,
+    and the family-tagged NVM verdicts (recurrent records carry their
+    write-heavier read_fraction into analyze_serve)."""
+    for fam, arch in FAMILY_ARCHS:
+        cfg = reduced(get_config(arch), dtype="float32")
+        model = build_model(cfg, max_seq=MAX_LEN)
+        params = model.init(jax.random.PRNGKey(0))
+
+        ref = EngineReference(model, params, slots=SLOTS, max_len=MAX_LEN)
+        _drive(ref, seed=0)                   # warm the decode jit
+        legacy_s = 1e9
+        for _ in range(2):
+            ref.reset()
+            t0 = time.perf_counter()
+            out_ref = _drive(ref, seed=1)
+            legacy_s = min(legacy_s, time.perf_counter() - t0)
+        tokens = sum(len(o) for o in out_ref.values())
+
+        eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                     ticks_per_sync=FAMILY_K, record_traffic=True)
+        t0 = time.perf_counter()
+        _drive(eng, seed=0)                   # cold: compiles + traffic
+        cold_s = time.perf_counter() - t0
+        engine_s, out_eng = 1e9, None
+        for _ in range(3):
+            eng.reset()
+            t0 = time.perf_counter()
+            out_eng = _drive(eng, seed=1)
+            engine_s = min(engine_s, time.perf_counter() - t0)
+        parity_k = out_eng == out_ref
+
+        k1 = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                    ticks_per_sync=1, record_traffic=False)
+        parity_k1 = _drive(k1, seed=1) == out_ref
+
+        eng_tps = tokens / engine_s
+        speedup = legacy_s / engine_s
+        verdicts = {v.shape: {"energy_ratio": v.energy_ratio,
+                              "edp_ratio": v.edp_ratio}
+                    for v in eng.nvm_verdicts()}
+
+        record = _base_record(
+            grid=(f"{N_REQUESTS} reqs x prompts {PROMPT_LENS} x new "
+                  f"{MAX_NEW} on {SLOTS} slots, max_len {MAX_LEN}, "
+                  f"K={FAMILY_K} ({arch} reduced)"),
+            leg=fam,
+            arch=arch,
+            family=fam,
+            attn_impl="xla",
+            engine_s=engine_s,
+            engine_cold_s=cold_s,
+            legacy_per_tick_s=legacy_s,
+            warm_tokens_per_s=eng_tps,
+            warm_tps_floor=FAMILY_TPS_FLOOR,
+            speedup=speedup,
+            speedup_floor=FAMILY_SPEEDUP_FLOOR,
+            greedy_parity=parity_k and parity_k1,
+            parity_k1=parity_k1,
+            parity_k4=parity_k,
+            nvm_verdicts=verdicts,
+        )
+        append_bench_record(BENCH_PATH, record)
+        emit(f"serve_engine_{fam}", engine_s * 1e6,
+             f"{arch}: fused {eng_tps:.0f} tok/s = {speedup:.1f}x vs ref "
+             f"| parity K1/K{FAMILY_K}="
+             f"{'ok' if parity_k1 and parity_k else 'MISMATCH'} | "
+             f"-> {BENCH_PATH.name}")
+        if not (parity_k and parity_k1):
+            failures.append(
+                f"{fam}: {arch} greedy tokens diverge from "
+                f"engine_reference (K1={parity_k1}, K{FAMILY_K}={parity_k})")
+        if speedup < FAMILY_SPEEDUP_FLOOR:
+            failures.append(
+                f"{fam}: speedup {speedup:.1f}x below the "
+                f"{FAMILY_SPEEDUP_FLOOR:.0f}x floor")
+        if eng_tps < FAMILY_TPS_FLOOR:
+            failures.append(
+                f"{fam}: warm {eng_tps:.0f} tok/s below the "
+                f"{FAMILY_TPS_FLOOR:.0f} tok/s floor")
+
+
 def run():
     cfg = reduced(get_config(ARCH), dtype="float32")
     model = build_model(cfg, max_seq=MAX_LEN)
@@ -447,6 +550,7 @@ def run():
 
     _paged_leg(model, params, out_ref, legacy_s, tokens, failures)
     _shared_prefix_leg(model, params, ref, failures)
+    _family_legs(failures)
     # appended last so BENCH_serve.json's ``latest`` carries the SLO
     # percentiles for the bursty workload
     _latency_leg(xla_engine, failures)

@@ -26,7 +26,11 @@ Fault sites exercised per engine (>= 6 distinct on BOTH engines):
 ``nan_logits``, ``kv_corrupt``, ``window_stall`` (watchdog retry AND
 sticky degrade-to-eager), ``engine.crash`` (rebuild + resubmit of every
 non-terminal request, mid-slot ones included); the paged engine adds
-``pool_exhaust`` and ``cow_storm``.
+``pool_exhaust`` and ``cow_storm``.  A recurrent-family pass
+(recurrentgemma, hybrid slot banks) re-runs ``nan_logits`` /
+``kv_corrupt`` / ``engine.crash`` to pin that quarantine-and-resume
+keeps bitwise parity when the faulted state is positionless bank rows
+rather than positioned KV.
 
 The verdict lands in ``BENCH_serve.json`` as a ``leg="chaos"`` record
 whose gated ``speedup`` metric is 1.0 when every invariant held and 0.0
@@ -57,6 +61,7 @@ from repro.serve import (DONE, FAILED, SHED, TIMED_OUT, Engine,
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 
 ARCH = "llama3-8b"
+RECURRENT_ARCH = "recurrentgemma-2b"   # hybrid slot-bank chaos coverage
 SLOTS = 3
 MAX_LEN = 48
 K = 4                        # ticks_per_sync: small so faults land mid-flight
@@ -351,6 +356,34 @@ def run(reduced_mode: bool = True):
                         record_traffic=False)
     paged_sites = _run_engine(paged, "paged", refs, n, n_traffic,
                               failures, scenarios)
+
+    # recurrent-family chaos (ISSUE 10): faults on positionless slot-bank
+    # state must still leave survivors with bitwise reference parity —
+    # quarantine/crash recovery replays prompt+output through the masked
+    # prefill scan, and _release_slot resets the victim's banks so NaN
+    # state cannot leak into the next occupant
+    rcfg = reduced(get_config(RECURRENT_ARCH), dtype="float32")
+    rmodel = build_model(rcfg, max_seq=MAX_LEN)
+    rparams = rmodel.init(jax.random.PRNGKey(0))
+    rref = EngineReference(rmodel, rparams, slots=SLOTS, max_len=MAX_LEN)
+    rrefs = {
+        "mixed": _reference_outputs(rref, lambda: _workload(n, seed=0)),
+        "crash": _reference_outputs(
+            rref, lambda: _workload(n, seed=5, max_new=(6, 12))),
+    }
+    rec_sites: set = set()
+    rec = Engine(rmodel, rparams, slots=SLOTS, max_len=MAX_LEN,
+                 ticks_per_sync=K, record_traffic=False)
+    scenarios.append(_scn_fault_plan(
+        rec, "recurrent", rrefs["mixed"], n, failures, rec_sites,
+        kind="nan_logits", fault=Fault("nan_logits", at=1),
+        expect=[("quarantined", 1), ("retried", 1)]))
+    scenarios.append(_scn_fault_plan(
+        rec, "recurrent", rrefs["mixed"], n, failures, rec_sites,
+        kind="kv_corrupt", fault=Fault("kv_corrupt", at=1),
+        expect=[("quarantined", 1)]))
+    scenarios.append(_scn_crash_rebuild(
+        rec, "recurrent", rrefs["crash"], n, failures, rec_sites))
     wall_s = time.perf_counter() - t0
 
     record = {
@@ -360,7 +393,8 @@ def run(reduced_mode: bool = True):
                  f"{PAGE_SIZE} ({ARCH} reduced)"),
         "leg": "chaos",
         "wall_s": wall_s,
-        "fault_sites": {"dense": dense_sites, "paged": paged_sites},
+        "fault_sites": {"dense": dense_sites, "paged": paged_sites,
+                        "recurrent": sorted(rec_sites)},
         "scenarios": scenarios,
         # the GATED metric: 1.0 = every invariant held, 0.0 = chaos
         # found a violation; gate.py's 0.35 tolerance then fails CI on
@@ -372,8 +406,9 @@ def run(reduced_mode: bool = True):
     append_bench_record(BENCH_PATH, record)
     emit("serve_resilience", wall_s * 1e6,
          f"{len(scenarios)} scenarios, sites dense={len(dense_sites)} "
-         f"paged={len(paged_sites)}, invariants="
-         f"{'ok' if not failures else 'VIOLATED'} -> {BENCH_PATH.name}")
+         f"paged={len(paged_sites)} recurrent={len(rec_sites)}, "
+         f"invariants={'ok' if not failures else 'VIOLATED'} -> "
+         f"{BENCH_PATH.name}")
     if failures:
         raise AssertionError("; ".join(failures))
 

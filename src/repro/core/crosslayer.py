@@ -39,6 +39,12 @@ from repro.core.tuner import iso_capacity_configs
 # on this because MRAM write energy is the dominant penalty term.
 READ_FRACTION = 0.60
 TRAIN_READ_FRACTION = 0.50
+# recurrent-bank serving (ssm/hybrid slot-state banks) rewrites the whole
+# conv/SSD/RG-LRU state every tick where KV decode appends one row and
+# reads the rest — the write-heaviest serve regime we model, below even
+# the training split (DESIGN.md §17; cf. arXiv 2308.02024 on STT-MRAM
+# write asymmetry dominating exactly this small-hot-state pattern).
+RECURRENT_READ_FRACTION = 0.45
 # a 100+MB accelerator SRAM tier uses high-density low-leak cells, not the
 # HP cells the GPU-L2 calibration fit; derate SRAM leakage accordingly so
 # the TPU-mode verdict is not an HP-leakage artifact (DESIGN.md §3).
@@ -73,7 +79,9 @@ def analyze_records(recs: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB,
     array-native pass — the cross-layer consumer of the traffic-tensor
     convention (DESIGN.md §10).  ``read_fraction`` is the mode-dependent
     read share of the modeled surface bytes (train mode passes the
-    write-heavier ``TRAIN_READ_FRACTION``)."""
+    write-heavier ``TRAIN_READ_FRACTION``); a scalar applies to every
+    record, an (N,) array gives each record its own split (serve mode
+    mixes families with different splits)."""
     if not recs:
         return []
     cfgs = _tier_configs(tier_mb)
@@ -146,6 +154,13 @@ def analyze_serve(records: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB
     most, and Roy et al. (arXiv 2308.02024) show the verdict hinges on
     measured per-step traffic — which is exactly what these records carry.
 
+    Records may carry a per-record ``read_fraction`` — the serve engines
+    tag ssm/hybrid traffic with ``RECURRENT_READ_FRACTION`` because
+    recurrent banks are rewritten in full every tick — which overrides
+    the inference-convention ``READ_FRACTION`` for that record only, so
+    one family-mixed record list scores each family on its own
+    read/write split (ISSUE 10, tentpole (d)).
+
     Records carrying a ``unique_page_fraction`` (the paged engine's
     measured share of physically-unique KV page reads per decode window,
     ``serve.engine.PagedEngine.serve_records``) get their
@@ -174,7 +189,16 @@ def analyze_serve(records: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB
         roof["bytes_per_device"] *= upf
         roof["memory_s"] *= upf
         scaled.append({**rec, "roofline": roof})
-    return analyze_records(scaled, tier_mb)
+    for rec in scaled:
+        rf = rec.get("read_fraction")
+        if rf is not None and not 0.0 < rf < 1.0:
+            raise ValueError(
+                f"record {rec.get('shape', '?')!r}: read_fraction {rf} "
+                f"outside (0, 1)")
+    rfs = jnp.asarray(
+        [float(r.get("read_fraction", READ_FRACTION)) for r in scaled],
+        jnp.float32)
+    return analyze_records(scaled, tier_mb, read_fraction=rfs)
 
 
 def analyze_train(records: List[Dict], tier_mb: float = TPU_SRAM_TIER_MB

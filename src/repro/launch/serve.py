@@ -21,7 +21,10 @@ are empty or any request went unserved — the CI smoke leans on that.
 chrome://tracing JSON of the engine's prefill calls, decode windows, and
 host drains.  After every run the launcher prints the engine's
 serve-mode NVM verdicts: SRAM vs STT/SOT-MRAM energy/EDP on the measured
-decode-tick and prefill traffic.
+decode-tick and prefill traffic — family-tagged shapes (DESIGN.md §17),
+with ssm/hybrid recurrent-bank traffic scored under its write-heavier
+read split.  ``--list-configs`` prints every registry arch with its
+family and which engines (dense/paged) can serve it, then exits.
 
 Resilience plumbing (DESIGN.md §16): ``--deadline-ticks`` gives every
 arrival-driven request an absolute deadline and ``--max-queue-depth``
@@ -77,9 +80,27 @@ def _terminal_report(eng, reqs, strict: bool) -> None:
             f"(states: {dict(hist)})")
 
 
+def _list_configs() -> None:
+    """Registry listing with per-engine serve capability (serve_modes):
+    which engines — Engine/EngineReference ("dense") and/or PagedEngine
+    ("paged") — accept each config."""
+    from repro.configs import all_configs
+    from repro.models.api import _FAMILY_SERVE_MODES
+    print(f"{'arch':<22} {'family':<8} engines")
+    for arch, cfg in all_configs().items():
+        modes = _FAMILY_SERVE_MODES[cfg.family]
+        engines = ["Engine", "EngineReference"] if "dense" in modes else []
+        if "paged" in modes:
+            engines.append("PagedEngine")
+        print(f"{arch:<22} {cfg.family:<8} {', '.join(engines)}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--list-configs", action="store_true",
+                    help="print every registry config with its family and "
+                         "the serve engines that accept it, then exit")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
@@ -142,6 +163,9 @@ def main():
                     help="exit non-zero if any request ends FAILED or "
                          "non-terminal (--no-strict to just report)")
     args = ap.parse_args()
+    if args.list_configs:
+        _list_configs()
+        return
 
     mesh = remesh(jax.device_count())
     cfg = get_config(args.arch)

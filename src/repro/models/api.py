@@ -17,6 +17,80 @@ from repro.models.common import (Axes, ParamDefs, Params, abstract, axes_of,
 
 
 @dataclasses.dataclass(frozen=True)
+class StateBank:
+    """One named per-slot state bank — the serve stack's cache contract.
+
+    The serve engines treat a model's decode cache as a *pytree of
+    banks*: the flat dict returned by ``Model.cache_defs`` / carried
+    through ``decode_step``, with one ``StateBank`` describing each
+    array.  The canonical bank contract is:
+
+      * Every bank has a slot axis at ``batch_axis``; row ``b`` belongs
+        exclusively to serve slot ``b``.  A decode step only reads and
+        writes its own row — rows are computationally independent, so a
+        row-masked merge/reset leaves every other slot's state bitwise
+        unchanged (the invariant behind continuous batching, preemption,
+        quarantine, and the hypothesis isolation tests).
+      * ``kind`` fixes the lifecycle the engine applies to the bank:
+
+        - ``"kv"``: positioned KV rows with a sequence axis at
+          ``seq_axis``.  Prefill scatters positions ``[0, len)`` along
+          that axis; decode writes at the row's own position and reads
+          are position-guarded (``decode_attention``), so stale entries
+          from a freed slot are unreadable and no reset is needed.
+        - ``"recurrent"``: positionless recurrent state (SSD conv/state,
+          RG-LRU hidden state).  Every decode step rewrites the whole
+          row, so the engine must merge decode results under the active
+          mask (frozen rows stay bitwise frozen), prefill is a masked
+          per-token scan, and slot admit/free re-initializes the row.
+        - ``"ring"``: ring-buffer KV whose slot-position entries (or the
+          ``pos`` bank guarding them) wrap modulo the window.  Treated
+          like ``"recurrent"`` — a new occupant could otherwise read a
+          stale in-window entry — plus reads honor the ``pos >= 0``
+          empty-slot guard.
+        - ``"enc"``: encoder output written once per row at admission
+          and passed through decode unchanged (whisper cross-attention
+          source).  Reset by full-row overwrite at the next admit.
+
+      * All banks with a ``seq_axis`` satisfy ``batch_axis < seq_axis``
+        (the engines' generic masked scatter relies on it).
+    """
+
+    name: str
+    kind: str            # "kv" | "recurrent" | "ring" | "enc"
+    batch_axis: int
+    seq_axis: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in ("kv", "recurrent", "ring", "enc"):
+            raise ValueError(f"unknown bank kind {self.kind!r}")
+        if self.seq_axis is not None and self.batch_axis >= self.seq_axis:
+            raise ValueError(
+                f"bank {self.name!r}: batch_axis {self.batch_axis} must "
+                f"precede seq_axis {self.seq_axis}")
+
+
+# Which serve engines can host each family (satellite of DESIGN.md §17):
+# "dense" = Engine/EngineReference slot caches, "paged" = PagedEngine page
+# pools.  Paged stays KV-decoder-only by design — pages hold positioned KV
+# rows, which recurrent/ring/encoder banks do not have.
+_FAMILY_SERVE_MODES: Dict[str, frozenset] = {
+    "dense": frozenset({"dense", "paged"}),
+    "moe": frozenset({"dense", "paged"}),
+    "vlm": frozenset({"dense", "paged"}),
+    "ssm": frozenset({"dense"}),
+    "hybrid": frozenset({"dense"}),
+    "encdec": frozenset({"dense"}),
+}
+
+
+def serve_families(mode: str) -> Tuple[str, ...]:
+    """Families servable under engine ``mode`` ("dense" | "paged")."""
+    return tuple(sorted(f for f, m in _FAMILY_SERVE_MODES.items()
+                        if mode in m))
+
+
+@dataclasses.dataclass(frozen=True)
 class Model:
     cfg: ModelConfig
     max_seq: int
@@ -103,9 +177,10 @@ class Model:
                     Dict[str, jax.Array], pos, *, attn_impl: str = "chunked",
                     page_table=None, kv_write_mask=None):
         """One decode step. ``pos`` is a scalar write position for the whole
-        batch, or — for ``supports_batched_serve`` families — a (B,) int32
-        vector of per-row positions (continuous batching: every serve slot
-        decodes at its own depth in one fused step).
+        batch, or a (B,) int32 vector of per-row positions (continuous
+        batching: every serve slot decodes at its own depth — or, for
+        recurrent banks, its own step count — in one fused step).  All
+        families accept the vector form; see ``StateBank``.
 
         With ``page_table`` (B, nb) the cache is the paged pool and
         ``pos`` each row's first write position; tokens (B, S) with
@@ -117,16 +192,66 @@ class Model:
             kv_write_mask=kv_write_mask)
         return logits, new_cache
 
+    # ---- serve capability metadata (DESIGN.md §17) ----------------------
+    @property
+    def serve_modes(self) -> frozenset:
+        """Per-engine serve capability: ``"dense"`` = the slot-cache
+        engines (Engine / EngineReference), ``"paged"`` = PagedEngine.
+        Every family serves batched through its state banks; only the
+        stacked-KV decoder families additionally page."""
+        return _FAMILY_SERVE_MODES[self.cfg.family]
+
     @property
     def supports_batched_serve(self) -> bool:
-        """Families with the standard stacked-KV cache layout
-        (layers, batch, max_len, kv_heads, head_dim): their decode path
-        accepts per-row position vectors and their prefill caches scatter
-        directly into serve-engine slots. ssm keeps positionless recurrent
-        state, so batched slots cannot be isolated (a step advances every
-        row's state); hybrid/encdec need per-row ring slots /
-        learned-position slices they don't have yet."""
-        return self.cfg.family in ("dense", "moe", "vlm")
+        """True when the slot-cache serve engines accept this model
+        (derived from ``serve_modes``; kept for callers of the old
+        single-bool API)."""
+        return "dense" in self.serve_modes
+
+    def state_banks(self) -> Dict[str, "StateBank"]:
+        """The model's slot-state banks, keyed exactly like
+        ``cache_defs``/``decode_step`` caches (contract: StateBank)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return {n: StateBank(n, "recurrent", batch_axis=1)
+                    for n in ("conv", "ssm")}
+        if cfg.family == "hybrid":
+            banks = {n: StateBank(n, "recurrent", batch_axis=1)
+                     for n in ("rec/h", "rec/conv")}
+            for n in ("attn/k", "attn/v", "attn/pos"):
+                banks[n] = StateBank(n, "ring", batch_axis=1, seq_axis=2)
+            return banks
+        if cfg.family == "encdec":
+            banks = {}
+            for i in range(cfg.dec_layers):
+                for n in (f"dec_{i}/k", f"dec_{i}/v"):
+                    banks[n] = StateBank(n, "kv", batch_axis=0, seq_axis=1)
+            banks["enc/out"] = StateBank("enc/out", "enc", batch_axis=0)
+            return banks
+        return {n: StateBank(n, "kv", batch_axis=1, seq_axis=2)
+                for n in ("k", "v")}
+
+    def encode_prompt(self, params: Params, tokens: jax.Array,
+                      lens: jax.Array) -> jax.Array:
+        """Encoder forward over stub frames built from prompt tokens
+        (whisper's conv frontend is a stub, so frames = token embeddings
+        masked by ``arange(Se) < lens``).
+
+        tokens (B, Se) int32 right-padded prompts, lens (B,) int32 valid
+        lengths.  Returns (B, Se, d_model) encoder output for the
+        ``enc/out`` bank.  The encoder is bidirectional with NO padding
+        mask, so the output depends on the padded length Se: serve
+        callers MUST pad to one fixed Se (the engines use max_len) so
+        every engine compiles the identical program and per-row encoder
+        outputs stay bitwise comparable across them.
+        """
+        if self.cfg.family != "encdec":
+            raise ValueError(
+                f"encode_prompt is encdec-only (family {self.cfg.family!r})")
+        emb = params["emb/tok"][tokens].astype(jnp.dtype(self.cfg.dtype))
+        m = jnp.arange(tokens.shape[1])[None, :] < lens[:, None]
+        frames = emb * m[:, :, None].astype(emb.dtype)
+        return tf.encoder_forward(self.cfg, params, frames)
 
 
 def build_model(cfg: ModelConfig, max_seq: int = 4096) -> Model:

@@ -244,6 +244,42 @@ def decode_attention(q, k, v, *, pos, window=0, logit_cap=0.0) -> jax.Array:
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def ring_decode_attention(q, k, v, *, q_pos, k_positions, window=0,
+                          logit_cap=0.0) -> jax.Array:
+    """Single-new-token attention over PER-ROW ring-buffer caches (the
+    hybrid family's batched-serve decode tick).
+
+    q: (B, 1, H, hd); k/v: (B, W, K, hd) ring buffers; q_pos: (B,) int32
+    per-row query positions; k_positions: (B, W) int32 per-row slot
+    positions (-1 = empty slot).  Row b attends slots with
+    ``0 <= k_positions[b, t] <= q_pos[b]`` inside its local window —
+    the per-row generalization of ``naive_attention``'s shared
+    ``k_positions`` vector, keeping the ring's empty-slot guard
+    (``pos >= 0``) so a freshly reset ring contributes nothing.  Rows
+    are fully independent, the same slot-isolation invariant as
+    ``decode_attention`` (DESIGN.md §11/§17).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qr = q.reshape(B, K, G, hd).astype(jnp.float32) * hd ** -0.5
+    logits = jnp.einsum("bkgh,btkh->bkgt", qr, k.astype(jnp.float32))
+    logits = softcap(logits, logit_cap)
+    kp = jnp.asarray(k_positions, jnp.int32)
+    qp = jnp.asarray(q_pos, jnp.int32)
+    ok = (kp <= qp[:, None]) & (kp >= 0)
+    if isinstance(window, int):
+        if window > 0:
+            ok &= kp > qp[:, None] - window
+    elif window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        ok &= (w <= 0) | (kp > qp[:, None] - w)
+    logits = logits + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
 def paged_suffix_attention(q, k, v, *, q_pos, window=0,
                            logit_cap=0.0) -> jax.Array:
     """Suffix-prefill attention over a row-linearized paged cache.

@@ -169,6 +169,12 @@ def cache_param_defs(cfg: ModelConfig, batch: int, max_len: int) -> ParamDefs:
             defs[f"dec_{i}/v"] = ParamDef(
                 (batch, max_len, K, hd),
                 ("batch", "kv_seq", "kv_heads", "head_dim"), init="zeros")
+        # per-row encoder-output bank (StateBank kind "enc"): row b holds
+        # slot b's encoder output, written at admission and read by every
+        # decode tick's cross-attention — whisper decodes slot-isolated
+        defs["enc/out"] = ParamDef(
+            (batch, max_len, cfg.d_model), ("batch", "kv_seq", "embed"),
+            init="zeros")
         return defs
     return attn_mod.cache_defs(cfg, batch, max_len, cfg.num_layers)
 
@@ -391,15 +397,22 @@ def _ssm_forward(cfg, params, x, *, mode, cache):
 
 def hybrid_forward(cfg: ModelConfig, params: Params, tokens, *, mode="train",
                    cache=None, cache_pos=None, attn_impl="chunked"):
-    if cache_pos is not None and jnp.ndim(cache_pos) >= 1:
-        raise ValueError(
-            "hybrid ring-buffer decode takes a scalar cache_pos; per-row "
-            "position vectors (batched serve) need a per-row ring slot")
+    """``cache_pos`` in decode mode is a scalar (whole batch at one
+    position — the dry-run convention) or a (B,) int32 vector of PER-ROW
+    positions (batched serve): each row then writes its k/v into its OWN
+    ring slot ``cache_pos[b] % W`` and attends through
+    ``attention.ring_decode_attention``'s per-row position mask, so serve
+    slots at different depths stay isolated (DESIGN.md §17)."""
+    vec = cache_pos is not None and jnp.ndim(cache_pos) >= 1
+    cp_vec = jnp.asarray(cache_pos, jnp.int32) if vec else None
     B, S = tokens.shape
     x = _embed(cfg, params, tokens)
     pat = hybrid_pattern(cfg)
-    positions = (jnp.full((1,), cache_pos, jnp.int32) if mode == "decode"
-                 else jnp.arange(S, dtype=jnp.int32))
+    if mode == "decode":
+        positions = (cp_vec[:, None] if vec
+                     else jnp.full((1,), cache_pos, jnp.int32))
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
     W = cfg.local_window
     r_i = a_i = 0
     new_rec_h, new_rec_conv = [], []
@@ -414,9 +427,22 @@ def hybrid_forward(cfg: ModelConfig, params: Params, tokens, *, mode="train",
         k = jnp.einsum("bsd,dhk->bshk", z, p["wk"])
         v = jnp.einsum("bsd,dhk->bshk", z, p["wv"])
         if cfg.rope_theta:
-            q = attn_mod.rope(q, positions[None, :], cfg.rope_theta)
-            k = attn_mod.rope(k, positions[None, :], cfg.rope_theta)
-        slot = jnp.mod(cache_pos, k_l.shape[1])
+            pos2d = positions if positions.ndim > 1 else positions[None, :]
+            q = attn_mod.rope(q, pos2d, cfg.rope_theta)
+            k = attn_mod.rope(k, pos2d, cfg.rope_theta)
+        Wr = k_l.shape[1]
+        if vec:
+            rows = jnp.arange(B)
+            slot = jnp.mod(cp_vec, Wr)
+            k_l = k_l.at[rows, slot].set(k[:, 0].astype(k_l.dtype))
+            v_l = v_l.at[rows, slot].set(v[:, 0].astype(v_l.dtype))
+            pos_l = pos_l.at[rows, slot].set(cp_vec)
+            out = attn_mod.ring_decode_attention(
+                q, k_l, v_l, q_pos=cp_vec, k_positions=pos_l, window=W,
+                logit_cap=cfg.attn_softcap)
+            y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return y, (k_l, v_l, pos_l)
+        slot = jnp.mod(cache_pos, Wr)
         k_l = jax.lax.dynamic_update_slice_in_dim(
             k_l, k.astype(k_l.dtype), slot, axis=1)
         v_l = jax.lax.dynamic_update_slice_in_dim(
@@ -555,24 +581,37 @@ def encoder_forward(cfg: ModelConfig, params: Params, frames: jax.Array,
 def encdec_forward(cfg: ModelConfig, params: Params, tokens, *, frames=None,
                    enc_out=None, mode="train", cache=None, cache_pos=None,
                    attn_impl="chunked"):
-    """Decoder (+ optional encoder) forward. Returns (logits, cache, aux)."""
-    if cache_pos is not None and jnp.ndim(cache_pos) >= 1:
-        raise ValueError(
-            "encdec decode takes a scalar cache_pos; per-row position "
-            "vectors (batched serve) need per-row learned-position slices")
+    """Decoder (+ optional encoder) forward. Returns (logits, cache, aux).
+
+    ``cache_pos`` in decode mode is a scalar (dry-run convention) or a
+    (B,) int32 vector of PER-ROW positions (batched serve): each row then
+    takes its own learned-position slice ``pos/dec[cache_pos[b]]``, its
+    self-attention KV writes land at its own row position (the per-layer
+    ``dec_i/*`` banks have batch axis 0), and — when ``enc_out`` is not
+    given — cross-attention reads the per-row ``enc/out`` bank from the
+    cache, so each slot decodes against ITS OWN encoder output
+    (DESIGN.md §17)."""
     if enc_out is None and frames is not None:
         enc_out = encoder_forward(cfg, params, frames, attn_impl,
                                   train=(mode == "train"))
+    if enc_out is None and cache is not None and "enc/out" in cache:
+        enc_out = cache["enc/out"]
     B, S = tokens.shape
+    vec = cache_pos is not None and jnp.ndim(cache_pos) >= 1
     if mode == "decode":
-        positions = jnp.full((1,), cache_pos, jnp.int32)
-        pos_emb = jax.lax.dynamic_slice_in_dim(params["pos/dec"], cache_pos,
-                                               1, axis=0)
+        if vec:
+            cp = jnp.asarray(cache_pos, jnp.int32)
+            positions = cp[:, None]                       # (B, 1)
+            pos_emb = params["pos/dec"][cp][:, None]      # (B, 1, D)
+        else:
+            positions = jnp.full((1,), cache_pos, jnp.int32)
+            pos_emb = jax.lax.dynamic_slice_in_dim(
+                params["pos/dec"], cache_pos, 1, axis=0)[None]
     else:
         positions = jnp.arange(S, dtype=jnp.int32)
-        pos_emb = params["pos/dec"][:S]
+        pos_emb = params["pos/dec"][:S][None]
     x = constrain(params["emb/tok"][tokens].astype(jnp.dtype(cfg.dtype))
-                  + pos_emb[None], _ACT)
+                  + pos_emb, _ACT)
     new_cache: Dict[str, jax.Array] = {}
     for i in range(cfg.dec_layers):
         c_i = None
@@ -590,6 +629,10 @@ def encdec_forward(cfg: ModelConfig, params: Params, tokens, *, frames=None,
         if kv is not None:
             new_cache[f"dec_{i}/k"] = kv["k"]
             new_cache[f"dec_{i}/v"] = kv["v"]
+    if new_cache and cache is not None and "enc/out" in cache:
+        # pass the enc bank through unchanged so the decode cache pytree
+        # keeps a stable structure (the serve window donates it as a carry)
+        new_cache["enc/out"] = cache["enc/out"]
     x = layer_norm(x, params["final_ln/g"], params["final_ln/b"])
     if cfg.tie_embeddings:
         logits = jnp.einsum("bsd,vd->bsv", x, params["emb/tok"])

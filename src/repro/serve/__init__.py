@@ -1,6 +1,7 @@
 from repro.serve.chaos import Fault, FaultPlan, InjectedFault
 from repro.serve.engine import (Engine, EngineReference, PagedEngine,
-                                Request, engine_reference)
+                                Request, UnsupportedFamilyError,
+                                engine_reference)
 from repro.serve.paged import (PagePool, PagePoolExhausted, RadixTree,
                                pages_for)
 from repro.serve.resilience import (DONE, FAILED, PENDING, QUEUED, RUNNING,
@@ -16,7 +17,7 @@ from repro.serve.workload import (lognormal_lengths, mixed_requests,
                                   shared_prefix_requests, staggered_groups)
 
 __all__ = ["Engine", "EngineReference", "PagedEngine", "Request",
-           "engine_reference",
+           "UnsupportedFamilyError", "engine_reference",
            "PagePool", "PagePoolExhausted", "RadixTree", "pages_for",
            "Fault", "FaultPlan", "InjectedFault",
            "DONE", "FAILED", "PENDING", "QUEUED", "RUNNING", "SHED",

@@ -18,9 +18,11 @@ the harness injects itself, is in DESIGN.md §16):
     site "pre_window"    — after page-table upload, before the window
         nan_logits   : set the engine's poison operand for one slot —
                        that row's logits become NaN for one window
-        kv_corrupt   : overwrite position 0 of one slot's KV (dense: the
-                       slot row; paged: the slot's first page, which may
-                       be tree-shared) with NaN directly in device cache
+        kv_corrupt   : overwrite one slot's state with NaN directly in
+                       device cache (positioned KV banks: position 0 of
+                       the slot row; positionless recurrent/enc banks:
+                       the whole row; paged: the slot's first page,
+                       which may be tree-shared)
     site "window_launch" — inside the watchdog's primary attempt
         window_stall : raise ``InjectedFault`` before the jitted call
                        (donated buffers stay alive, so the watchdog
@@ -168,10 +170,24 @@ class FaultPlan:
             engine.cache = {
                 k: v.at[:, page, :1].set(jnp.nan)
                 for k, v in engine.cache.items()}
-        else:                                         # dense slot rows
-            engine.cache = {
-                k: v.at[:, s, :1].set(jnp.nan)
-                for k, v in engine.cache.items()}
+        else:                                         # dense slot banks
+            banks = getattr(engine, "_banks", {})
+            cache = dict(engine.cache)
+            for k, v in cache.items():
+                if not jnp.issubdtype(v.dtype, jnp.floating):
+                    continue        # e.g. ring position rows (int32)
+                b = banks.get(k)
+                ba = b.batch_axis if b is not None else 1
+                idx = [slice(None)] * v.ndim
+                idx[ba] = s
+                if b is not None and b.seq_axis is not None:
+                    # positioned bank: only position 0 (always written
+                    # and attended) so the fault surfaces deterministically
+                    idx[b.seq_axis] = slice(0, 1)
+                # positionless recurrent/enc banks: the whole row is read
+                # every tick, so poison it all
+                cache[k] = v.at[tuple(idx)].set(jnp.nan)
+            engine.cache = cache
 
     def _do_pool_exhaust(self, f: Fault, engine) -> None:
         pool = getattr(engine, "pool", None)

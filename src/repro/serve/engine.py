@@ -45,12 +45,52 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import Model
+from repro.models.api import Model, serve_families
 from repro.serve.paged import (PagePool, PagePoolExhausted, RadixTree,
                                pages_for)
 from repro.serve.resilience import (DONE, FAILED, PENDING, QUEUED, RUNNING,
                                     SHED, TERMINAL_STATES, TIMED_OUT,
                                     ShedPolicy, WindowWatchdog)
+
+
+class UnsupportedFamilyError(ValueError):
+    """Raised at ENGINE CONSTRUCTION for a model family the engine cannot
+    serve, naming the family and the supported set (DESIGN.md §17) —
+    instead of a generic ValueError deep inside a forward pass
+    mid-request.  Subclasses ValueError so pre-existing callers that
+    catch broadly keep working."""
+
+    def __init__(self, family: str, supported, engine: str,
+                 detail: str = ""):
+        self.family = family
+        self.supported = tuple(sorted(supported))
+        msg = (f"{engine} does not support model family {family!r} "
+               f"(supported families: {', '.join(self.supported)})")
+        if detail:
+            msg += f"; {detail}"
+        super().__init__(msg)
+
+
+def _where_rows(mask, new, old, axis):
+    """Row-masked merge: keep ``new`` where ``mask`` (a (B,) bool over the
+    bank's slot axis ``axis``) else ``old``, other axes broadcast."""
+    m = mask.reshape(tuple(-1 if d == axis else 1
+                           for d in range(old.ndim)))
+    return jnp.where(m, new, old)
+
+
+def _reset_rows(cache, mask, banks, resets):
+    """Re-initialize the GUARDED (recurrent/ring) bank rows selected by
+    ``mask``; kv/enc banks and every unselected row stay bitwise intact.
+    ``resets[name]`` is the bank's init fill value (e.g. -1 for the ring
+    position bank, 0 elsewhere)."""
+    out = dict(cache)
+    for n, b in banks.items():
+        if b.kind not in ("recurrent", "ring"):
+            continue
+        out[n] = _where_rows(mask, jnp.full_like(out[n], resets[n]),
+                             out[n], b.batch_axis)
+    return out
 
 
 @dataclasses.dataclass
@@ -300,11 +340,15 @@ class Engine:
                  shed_policy: Optional[ShedPolicy] = None,
                  watchdog: Optional[WindowWatchdog] = None,
                  fault_plan=None, health_check: bool = True):
-        if not model.supports_batched_serve:
+        if "dense" not in model.serve_modes:
+            raise UnsupportedFamilyError(
+                model.cfg.family, serve_families("dense"), "Engine")
+        if attn_impl == "pallas_decode" \
+                and model.cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError(
-                f"family {model.cfg.family!r} is not supported by the fused "
-                "serve engine (needs the standard stacked-KV cache layout); "
-                "use EngineReference")
+                "attn_impl='pallas_decode' requires a stacked-KV decoder "
+                f"family (dense/moe/vlm); family {model.cfg.family!r} "
+                "decodes through its state banks on the XLA path")
         self.model = model
         self.params = params
         self.slots = slots
@@ -352,11 +396,35 @@ class Engine:
         self._vocab = int(model.cfg.vocab_size)
         self._decode_attn_impl = (
             "pallas_decode" if attn_impl == "pallas_decode" else "chunked")
+        # state-bank metadata (DESIGN.md §17): the per-bank slot/seq axes
+        # drive the generic masked scatter, the guarded set names the
+        # banks (recurrent/ring) whose rows must be merged under the
+        # active mask every tick and re-initialized on slot admit/free
+        self._banks = model.state_banks()
+        defs = model.cache_defs(slots, max_len)
+        self._bank_reset = {
+            n: (d.const if d.init == "const" else 0)
+            for n, d in defs.items()}
+        self._guarded = frozenset(
+            n for n, b in self._banks.items()
+            if b.kind in ("recurrent", "ring"))
         self._window_jit = jax.jit(self._window, donate_argnums=(1, 2))
         self._deact_jit = jax.jit(
             lambda st, m: dict(st, active=st["active"] & ~m))
         self._prefill_jit = jax.jit(self._prefill_prog,
                                     donate_argnums=(1, 2))
+        if self._guarded:
+            self._reset_jit = jax.jit(
+                lambda c, m: _reset_rows(c, m, self._banks,
+                                         self._bank_reset),
+                donate_argnums=(0,))
+        if model.cfg.family == "encdec":
+            # standalone fixed-shape encoder program: BOTH engines call it
+            # with (slots, max_len) tokens so the compiled executable — and
+            # therefore each row's enc/out bank content — is bitwise
+            # identical across Engine and EngineReference
+            self._encode_jit = jax.jit(
+                lambda p, t, l: model.encode_prompt(p, t, l))
         self._traffic: Dict[str, object] = {"decode": None, "prefill": {}}
         self.reset()
 
@@ -417,9 +485,21 @@ class Engine:
         def tick(carry, _):
             cache, last, pos, active, remaining, temps, key = carry
             safe_pos = jnp.clip(pos, 0, max_len - 1)
-            logits, cache = self.model.decode_step(
+            logits, new_cache = self.model.decode_step(
                 params, cache, {"tokens": last[:, None]}, safe_pos,
                 attn_impl=self._decode_attn_impl, **decode_kw)
+            if self._guarded:
+                # recurrent/ring banks advance every step regardless of
+                # position, so freeze inactive rows explicitly (KV banks
+                # need no merge: reads are position-guarded).  Uses the
+                # PRE-update active mask: a row finishing THIS tick keeps
+                # this tick's state, matching the reference engine.
+                new_cache = {
+                    n: (_where_rows(active, new_cache[n], cache[n],
+                                    self._banks[n].batch_axis)
+                        if n in self._guarded else new_cache[n])
+                    for n in new_cache}
+            cache = new_cache
             lg = logits[:, -1].astype(jnp.float32)
             lg = jnp.where(poison[:, None], jnp.float32(jnp.nan), lg)
             ok = jnp.isfinite(lg).all(axis=-1)
@@ -446,38 +526,66 @@ class Engine:
                  "remaining": remaining, "temps": temps}
         return cache, state, key, toks, fins, oks
 
-    def _prefill_prog(self, params, cache, state, tokens, lens, admit,
-                      max_new, temps_in, key):
-        """Batched chunked prefill into assigned slots via masked scatter.
+    def _scatter_bank(self, name, old, new, valid):
+        """Masked scatter of a prefill bank: write ``new`` (seq length P)
+        into ``old`` where ``valid[row, col]``, along the bank's declared
+        batch/seq axes.  Rows not being admitted — in particular rows
+        mid-decode — are preserved bit-exactly.  Relies on the StateBank
+        contract ``batch_axis < seq_axis`` so the (B, P) mask reshapes
+        into the bank's layout directly."""
+        bank = self._banks[name]
+        ba, sa = bank.batch_axis, bank.seq_axis
+        P = new.shape[sa]
+        mask = valid.reshape(tuple(
+            old.shape[d] if d == ba else (P if d == sa else 1)
+            for d in range(old.ndim)))
+        idx = tuple(slice(0, P) if d == sa else slice(None)
+                    for d in range(old.ndim))
+        return old.at[idx].set(
+            jnp.where(mask, new.astype(old.dtype), old[idx]))
 
-        tokens: (slots, P) right-padded prompts (rows not being admitted
-        carry zeros and a False ``admit`` flag).  The KV scatter writes
-        only where ``admit[row] & (col < lens[row])`` — every other cache
-        entry, in particular every row mid-decode, is preserved bit-
-        exactly.  The same program samples each admitted row's first token
-        from its last prompt position's logits, applies the immediate-
-        termination rule, and writes the admitted rows of the slot state.
-        Returns (cache, state, key, t0, done0, ok0) — ``ok0`` is the
-        admission-time health verdict (finite last-position logits), the
-        prefill leg of the window health check: the paged subclass
-        attends shared / recycled KV pages during prefill, so a
-        corrupted page would otherwise poison t0 unchecked.
-        """
-        P = tokens.shape[1]
-        logits, fresh = self.model.prefill(
-            params, {"tokens": tokens}, attn_impl=self.prefill_attn_impl)
-        valid = admit[:, None] & (jnp.arange(P)[None, :] < lens[:, None])
+    def _prefill_scan(self, params, cache, tokens, lens, admit):
+        """Masked per-token decode scan: the prefill path for recurrent
+        families (ssm/hybrid), whose positionless banks cannot scatter a
+        full-sequence prefill cache.  Admitted rows' guarded banks reset
+        to init, then every prompt token runs one decode step and the
+        result merges ONLY into rows still inside their prompt
+        (``admit & (t < lens)``) — other slots, including rows
+        mid-decode, stay bitwise untouched, and the final state left in
+        each admitted slot is exactly what the reference engine's
+        per-token loop computes (rows are computationally independent).
+        Returns (cache, last_lg) with each admitted row's logits captured
+        at its last prompt position."""
+        B, P = tokens.shape
+        cache = _reset_rows(cache, admit, self._banks, self._bank_reset)
+        lg0 = jnp.zeros((B, self._vocab), jnp.float32)
 
-        def scatter(old, new):
-            mask = valid[None, :, :, None, None]
-            keep = old[:, :, :P]
-            return old.at[:, :, :P].set(
-                jnp.where(mask, new.astype(old.dtype), keep))
+        def body(carry, xs):
+            cache, lg_keep = carry
+            tok_t, t = xs
+            pos = jnp.full((B,), t, jnp.int32)
+            logits, new = self.model.decode_step(
+                params, cache, {"tokens": tok_t[:, None]}, pos,
+                attn_impl=self._decode_attn_impl)
+            live = admit & (t < lens)
+            cache = {n: _where_rows(live, new[n], cache[n],
+                                    self._banks[n].batch_axis)
+                     for n in cache}
+            lg = logits[:, -1].astype(jnp.float32)
+            lg_keep = jnp.where((t == lens - 1)[:, None], lg, lg_keep)
+            return (cache, lg_keep), None
 
-        cache = {name: scatter(cache[name], fresh[name]) for name in cache}
-        idx = jnp.clip(lens - 1, 0, P - 1)
-        last_lg = jnp.take_along_axis(
-            logits, idx[:, None, None], axis=1)[:, 0].astype(jnp.float32)
+        (cache, last_lg), _ = jax.lax.scan(
+            body, (cache, lg0),
+            (tokens.T, jnp.arange(P, dtype=jnp.int32)))
+        return cache, last_lg
+
+    def _prefill_tail(self, cache, state, lens, admit, max_new, temps_in,
+                      key, last_lg):
+        """Shared prefill epilogue: sample each admitted row's first
+        token, apply the immediate-termination rule, and write the
+        admitted rows of the slot state (shared by the dense scatter,
+        recurrent scan, and paged suffix paths)."""
         ok0 = jnp.isfinite(last_lg).all(axis=-1)
         key, sub = jax.random.split(key)
         t0 = self._sample_batch(last_lg, temps_in, sub)
@@ -492,6 +600,49 @@ class Engine:
             "temps": jnp.where(admit, temps_in, state["temps"]),
         }
         return cache, state, key, t0, done0, ok0
+
+    def _prefill_prog(self, params, cache, state, tokens, lens, admit,
+                      max_new, temps_in, key, *extra):
+        """Batched prefill into assigned slots, dispatched per family.
+
+        tokens: (slots, P) right-padded prompts (rows not being admitted
+        carry zeros and a False ``admit`` flag).  KV families run ONE
+        full-sequence ``model.prefill`` whose banks scatter where
+        ``admit[row] & (col < lens[row])``; encdec additionally writes
+        the admitted rows of the ``enc/out`` bank from the pre-computed
+        encoder operand in ``extra`` before prefilling against it;
+        recurrent families (ssm/hybrid) run the masked per-token scan
+        (``_prefill_scan``).  In every case non-admitted cache rows —
+        in particular rows mid-decode — are preserved bit-exactly.
+        Returns (cache, state, key, t0, done0, ok0) — ``ok0`` is the
+        admission-time health verdict (finite last-position logits), the
+        prefill leg of the window health check."""
+        fam = self.model.cfg.family
+        if fam in ("ssm", "hybrid"):
+            cache, last_lg = self._prefill_scan(
+                params, cache, tokens, lens, admit)
+            return self._prefill_tail(cache, state, lens, admit, max_new,
+                                      temps_in, key, last_lg)
+        batch = {"tokens": tokens}
+        if fam == "encdec":
+            cache = dict(cache)
+            cache["enc/out"] = _where_rows(
+                admit, extra[0].astype(cache["enc/out"].dtype),
+                cache["enc/out"], self._banks["enc/out"].batch_axis)
+            batch["enc_out"] = cache["enc/out"]
+        P = tokens.shape[1]
+        logits, fresh = self.model.prefill(
+            params, batch, attn_impl=self.prefill_attn_impl)
+        valid = admit[:, None] & (jnp.arange(P)[None, :] < lens[:, None])
+        cache = {name: (self._scatter_bank(name, cache[name], fresh[name],
+                                           valid)
+                        if name in fresh else cache[name])
+                 for name in cache}
+        idx = jnp.clip(lens - 1, 0, P - 1)
+        last_lg = jnp.take_along_axis(
+            logits, idx[:, None, None], axis=1)[:, 0].astype(jnp.float32)
+        return self._prefill_tail(cache, state, lens, admit, max_new,
+                                  temps_in, key, last_lg)
 
     # ---- traffic accounting --------------------------------------------
     def _analyze(self, jitted, *args):
@@ -548,9 +699,20 @@ class Engine:
             admit[s] = True
             max_new[s] = r.max_new_tokens - len(r.output)
             temps[s] = r.temperature
+        extra = ()
+        if self.model.cfg.family == "encdec":
+            # encoder rows for the enc/out bank: ALWAYS padded to max_len
+            # (never the per-wave pow2 P) so the encoder executable — and
+            # each row's output — is identical across admission waves and
+            # across engines (see Model.encode_prompt)
+            toks_full = np.zeros((self.slots, self.max_len), np.int32)
+            for s, r in pairs:
+                toks_full[s, :len(eff[s])] = eff[s]
+            extra = (self._encode_jit(self.params, jnp.asarray(toks_full),
+                                      jnp.asarray(lens)),)
         args = (self.params, self.cache, self._state, jnp.asarray(tokens),
                 jnp.asarray(lens), jnp.asarray(admit), jnp.asarray(max_new),
-                jnp.asarray(temps), self.key)
+                jnp.asarray(temps), self.key, *extra)
         if P not in self._traffic["prefill"]:
             self._traffic["prefill"][P] = self._analyze(
                 self._prefill_jit, *args)
@@ -586,7 +748,15 @@ class Engine:
 
     def _release_slot(self, s: int) -> None:
         """Hook called when slot ``s``'s request finishes, just before the
-        slot frees (PagedEngine returns the slot's page references)."""
+        slot frees (PagedEngine returns the slot's page references).
+        Guarded (recurrent/ring) banks re-initialize ONLY that slot's
+        rows — positioned KV needs no reset (reads are pos-guarded), but
+        positionless state would otherwise leak into the next occupant's
+        prefill scan."""
+        if self._guarded:
+            mask = np.zeros(self.slots, bool)
+            mask[s] = True
+            self.cache = self._reset_jit(self.cache, jnp.asarray(mask))
 
     def _pre_window(self) -> None:
         """Hook called right before a decode window launches (PagedEngine
@@ -729,7 +899,10 @@ class Engine:
             return 0
         self._pre_window()
         self._fire_faults("pre_window")
-        poison = jnp.asarray(self._poison_host)
+        # copy before transfer: on CPU jnp.asarray may alias the numpy
+        # buffer, and the one-shot clear below would race the async
+        # window launch, silently dropping the injected poison
+        poison = jnp.asarray(np.array(self._poison_host))
         extra = self._extra_window_args()
         args = (self.params, self.cache, self._state, self.key, poison,
                 *extra)
@@ -802,6 +975,7 @@ class Engine:
         paper's "would an MRAM tier help THIS workload" question."""
         mesh = mesh or f"{jax.device_count()}dev"
         arch = self.model.cfg.arch
+        fam = self.model.cfg.family
 
         def terms(rl, div):
             return {"flops_per_device": rl.flops_per_device / div,
@@ -811,23 +985,34 @@ class Engine:
                     "memory_s": rl.memory_s / div,
                     "collective_s": rl.collective_s / div}
 
+        # Recurrent-bank traffic is write-heavier than KV decode: every
+        # tick rewrites the full conv/SSD/RG-LRU state in place, where KV
+        # decode appends one row and *reads* the rest.  Tag ssm/hybrid
+        # records with their own read/write split so analyze_serve scores
+        # the write-asymmetric NVM tiers on the bank regime they actually
+        # see (ISSUE 10 tentpole (d)).
+        extra: dict = {"family": fam}
+        if fam in ("ssm", "hybrid"):
+            from repro.core.crosslayer import RECURRENT_READ_FRACTION
+            extra["read_fraction"] = RECURRENT_READ_FRACTION
+
         recs = []
         rl = self._traffic["decode"]
         if rl is not None and self._counts["decode_ticks"]:
             recs.append({
                 "arch": arch, "mesh": mesh, "kind": "decode",
-                "shape": f"serve_decode_b{self.slots}_l{self.max_len}",
+                "shape": f"serve_{fam}_decode_b{self.slots}_l{self.max_len}",
                 "attn_impl": self.attn_impl,
                 "ticks": self._counts["decode_ticks"],
-                "roofline": terms(rl, self.ticks_per_sync)})
+                "roofline": terms(rl, self.ticks_per_sync), **extra})
         for P, rl in sorted(self._traffic["prefill"].items()):
             calls = self._counts["prefill_calls"].get(P, 0)
             if rl is None or not calls:
                 continue
             recs.append({
                 "arch": arch, "mesh": mesh, "kind": "prefill",
-                "shape": f"serve_prefill_p{P}_b{self.slots}",
-                "calls": calls, "roofline": terms(rl, 1)})
+                "shape": f"serve_{fam}_prefill_p{P}_b{self.slots}",
+                "calls": calls, "roofline": terms(rl, 1), **extra})
         return recs
 
     def nvm_verdicts(self, tier_mb: Optional[float] = None):
@@ -882,6 +1067,13 @@ class PagedEngine(Engine):
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  page_size: int = 8, num_pages: Optional[int] = None, **kw):
+        if "paged" not in model.serve_modes:
+            raise UnsupportedFamilyError(
+                model.cfg.family, serve_families("paged"), "PagedEngine",
+                detail="the paged engine is KV-decoder-only by design: "
+                       "pages hold positioned KV rows, and recurrent/ring/"
+                       "encoder banks have no page-addressable layout — "
+                       "use Engine for this family")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size != 0:
@@ -1258,6 +1450,12 @@ class EngineReference:
         (``jnp.full((slots, 1), token)`` in the seed ``_step_slot``).
     Greedy outputs are parity-enforced against ``Engine`` in
     tests/test_serve_engine.py and benchmarks/serve_engine.py.
+
+    Family support matches ``Engine`` (every ``serve_modes``-dense
+    family): recurrent/ring banks get a per-row reset at admission and a
+    bank-aware row restore during prefill, and encdec rows are encoded
+    through the same fixed-shape program as ``Engine._encode_jit`` so
+    enc/out content is bitwise identical across engines.
     """
 
     ticks_per_sync = 1   # per-tick engine: every step is its own window
@@ -1265,15 +1463,10 @@ class EngineReference:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  eos_id: Optional[int] = None, seed: int = 0,
                  shed_policy: Optional[ShedPolicy] = None):
-        if not model.supports_batched_serve:
-            # ssm included: recurrent state has no write position, so the
-            # write-at-own-pos-before-read isolation argument the KV slots
-            # rest on does not apply — inactive rows' state would advance
-            # on every tick and outputs would become schedule-dependent
-            raise ValueError(
-                f"family {model.cfg.family!r} cannot be slot-isolated by "
-                "the reference engine (per-row positioned KV cache "
-                "required)")
+        if "dense" not in model.serve_modes:
+            raise UnsupportedFamilyError(
+                model.cfg.family, serve_families("dense"),
+                "EngineReference")
         self.model = model
         self.params = params
         self.slots = slots
@@ -1282,8 +1475,20 @@ class EngineReference:
         self.seed = seed
         self.shed_policy = shed_policy if shed_policy is not None \
             else ShedPolicy()
+        self._banks = model.state_banks()
+        defs = model.cache_defs(slots, max_len)
+        self._bank_reset = {n: (d.const if d.init == "const" else 0)
+                            for n, d in defs.items()}
+        self._guarded = frozenset(
+            n for n, b in self._banks.items()
+            if b.kind in ("recurrent", "ring"))
         self._decode = jax.jit(
             lambda p, c, b, pos: model.decode_step(p, c, b, pos))
+        if model.cfg.family == "encdec":
+            # the SAME fixed-shape encoder program as Engine._encode_jit,
+            # so both engines' enc/out rows are bitwise identical
+            self._encode = jax.jit(
+                lambda p, t, l: model.encode_prompt(p, t, l))
         self.reset()
 
     def reset(self, seed: Optional[int] = None) -> None:
@@ -1332,6 +1537,25 @@ class EngineReference:
         self.slot_req[slot] = req
         eff = list(req.prompt) + list(req.output)
         sel = (jnp.arange(self.slots) == slot)
+        if self._guarded:
+            # recurrent/ring banks keep the PREVIOUS occupant's state in
+            # this row (no position guard to mask it out) — reset the
+            # admitted row before replaying the prompt, exactly like
+            # Engine._prefill_scan
+            self.cache = _reset_rows(self.cache, sel, self._banks,
+                                     self._bank_reset)
+        if self.model.cfg.family == "encdec":
+            toks_full = np.zeros((self.slots, self.max_len), np.int32)
+            toks_full[slot, :len(eff)] = eff
+            lens = np.zeros(self.slots, np.int32)
+            lens[slot] = len(eff)
+            enc = self._encode(self.params, jnp.asarray(toks_full),
+                               jnp.asarray(lens))
+            cache = dict(self.cache)
+            cache["enc/out"] = _where_rows(
+                sel, enc.astype(cache["enc/out"].dtype),
+                cache["enc/out"], self._banks["enc/out"].batch_axis)
+            self.cache = cache
         lg = None
         for t, tok in enumerate(eff):
             toks = self._last.copy()
@@ -1343,11 +1567,12 @@ class EngineReference:
                 self.params, old, {"tokens": jnp.asarray(toks[:, None])},
                 jnp.asarray(pos))
             # only the target row may change (the seed broadcast every
-            # prefill token's KV into all rows here)
-            self.cache = jax.tree.map(
-                lambda n, o: jnp.where(
-                    sel.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
-                new, old)
+            # prefill token's KV into all rows here); banks carry their
+            # own batch axis, so route the row select through it
+            self.cache = {
+                n: _where_rows(sel, new[n], old[n],
+                               self._banks[n].batch_axis)
+                for n in new}
             lg = logits
         t0 = self._sample(np.asarray(lg)[slot, -1].astype(np.float32),
                           req.temperature)

@@ -1,0 +1,171 @@
+"""Slot-isolation property for recurrent state banks (ISSUE 10).
+
+The KV mirror of this property rests on position-guarded reads; the
+recurrent/ring banks have no positions, so isolation rests entirely on
+the engine's row-masked merges and resets (``StateBank``).  The property
+driven here: under arbitrary interleavings of admit / decode / preempt /
+quarantine(poison) ops,
+
+  * an occupied slot's guarded bank rows are BITWISE unchanged by any
+    other slot's prefill (admission never leaks across rows),
+  * a free slot's guarded bank rows always sit at the bank's reset value
+    (release/preempt/quarantine scrub exactly one row; inactive rows
+    never advance inside a decode window),
+  * every request still finishes with greedy outputs bitwise equal to an
+    undisturbed ``EngineReference`` run of the same prompts.
+
+A seeded deterministic sweep always runs; the hypothesis-driven version
+(shrinking over op lists) runs when hypothesis is installed, matching
+the repo's property-suite convention.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serve import Engine, EngineReference, Request, ShedPolicy
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # tier-1 containers may lack hypothesis
+    HAVE_HYPOTHESIS = False
+
+MAX_LEN = 32
+SLOTS = 3
+MAX_TICKS = 4000
+ARCHS = ("mamba2-1.3b", "recurrentgemma-2b")
+
+
+@functools.lru_cache(maxsize=None)
+def _mp(arch):
+    cfg = reduced(get_config(arch), dtype="float32")
+    model = build_model(cfg, max_seq=MAX_LEN)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _bank_rows(eng, s):
+    """Bitwise snapshot of slot ``s``'s guarded bank rows."""
+    return {n: np.take(np.asarray(eng.cache[n]), s,
+                       axis=eng._banks[n].batch_axis)
+            for n in sorted(eng._guarded)}
+
+
+def _assert_rows(a, b, msg):
+    for n in a:
+        np.testing.assert_array_equal(a[n], b[n], err_msg=f"{msg}: bank {n}")
+
+
+def _assert_reset(eng, s, msg):
+    rows = _bank_rows(eng, s)
+    for n, row in rows.items():
+        want = np.full_like(row, eng._bank_reset[n])
+        np.testing.assert_array_equal(
+            row, want, err_msg=f"{msg}: bank {n} not at reset value")
+
+
+def _apply_ops(arch, ops):
+    """Drive one op interleaving, asserting bank isolation at every step;
+    returns after checking final greedy parity vs a clean reference."""
+    model, params = _mp(arch)
+    eng = Engine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                 ticks_per_sync=2, record_traffic=False,
+                 shed_policy=ShedPolicy(max_retries=100))
+    submitted = []
+    uid, tok = 0, 1
+    for op in ops:
+        kind = op[0]
+        occupied = {s: r for s, r in enumerate(eng.slot_req)
+                    if r is not None}
+        before = {s: _bank_rows(eng, s) for s in occupied}
+        free_before = [s for s in range(SLOTS) if s not in occupied]
+        if kind == "admit":
+            _, plen, mnew = op
+            prompt = [(tok + i) % 500 + 1 for i in range(plen)]
+            tok += plen
+            r = Request(uid=uid, prompt=prompt, max_new_tokens=mnew)
+            uid += 1
+            submitted.append((r, prompt, mnew))
+            eng.submit(r)
+            eng._admit()
+            for s, r0 in occupied.items():
+                if eng.slot_req[s] is r0:
+                    _assert_rows(before[s], _bank_rows(eng, s),
+                                 f"admit leaked into occupied slot {s}")
+        elif kind == "preempt":
+            s = op[1] % SLOTS
+            if eng.slot_req[s] is None:
+                continue
+            eng.preempt_slot(s)
+            for o, r0 in occupied.items():
+                if o != s and eng.slot_req[o] is r0:
+                    _assert_rows(before[o], _bank_rows(eng, o),
+                                 f"preempt({s}) disturbed slot {o}")
+            _assert_reset(eng, s, f"preempt({s})")
+        elif kind == "poison":
+            s = op[1] % SLOTS
+            if eng.slot_req[s] is not None:
+                eng._poison_host[s] = True
+            eng.step()           # NaN logits -> quarantine + requeue
+        else:                    # "step"
+            eng.step()
+        # inactive rows never advance and releases scrub exactly one
+        # row, so a still-free slot is always bitwise at its reset value
+        for s in free_before:
+            if eng.slot_req[s] is None:
+                _assert_reset(eng, s, f"{kind}: free slot {s} drifted")
+    assert eng.run(max_ticks=MAX_TICKS) == 0
+    for s in range(SLOTS):
+        _assert_reset(eng, s, "post-run slot")
+
+    ref = EngineReference(model, params, slots=SLOTS, max_len=MAX_LEN)
+    clones = {}
+    for r, prompt, mnew in submitted:
+        rr = Request(uid=r.uid, prompt=list(prompt), max_new_tokens=mnew)
+        clones[r.uid] = rr
+        ref.submit(rr)
+    assert ref.run(max_ticks=MAX_TICKS) == 0
+    for r, _, _ in submitted:
+        assert list(r.output) == list(clones[r.uid].output), \
+            f"uid {r.uid} diverged from the undisturbed reference"
+
+
+def _ops_from_rng(rng, n_ops):
+    ops = []
+    for _ in range(n_ops):
+        k = int(rng.integers(6))
+        if k <= 2:               # bias toward admit so slots stay busy
+            ops.append(("admit", int(rng.integers(2, 8)),
+                        int(rng.integers(2, 6))))
+        elif k == 3:
+            ops.append(("step",))
+        elif k == 4:
+            ops.append(("preempt", int(rng.integers(SLOTS))))
+        else:
+            ops.append(("poison", int(rng.integers(SLOTS))))
+    return ops
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_recurrent_bank_isolation_seeded(arch, seed):
+    rng = np.random.default_rng(seed)
+    _apply_ops(arch, _ops_from_rng(rng, 10))
+
+
+if HAVE_HYPOTHESIS:
+    _OP = st.one_of(
+        st.tuples(st.just("admit"), st.integers(2, 7), st.integers(2, 5)),
+        st.tuples(st.just("step")),
+        st.tuples(st.just("preempt"), st.integers(0, SLOTS - 1)),
+        st.tuples(st.just("poison"), st.integers(0, SLOTS - 1)),
+    )
+
+    @settings(max_examples=8, deadline=None)
+    @given(ops=st.lists(_OP, min_size=3, max_size=10))
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_recurrent_bank_isolation_property(arch, ops):
+        _apply_ops(arch, ops)

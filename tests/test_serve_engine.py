@@ -60,18 +60,34 @@ def test_vector_cache_pos_matches_per_row_scalar_decode(mp):
                                    atol=1e-5, rtol=1e-5)
 
 
-def test_unsupported_families_are_rejected(mp):
-    ssm = reduced(get_config("mamba2-1.3b"))
+def test_unsupported_families_fail_fast_with_structured_error(mp):
+    """PagedEngine is KV-decoder-only by design and must say so at
+    construction time via UnsupportedFamilyError; the slot-bank engines
+    (Engine / EngineReference) accept every family."""
+    from repro.serve import PagedEngine, UnsupportedFamilyError
+    ssm = reduced(get_config("mamba2-1.3b"), dtype="float32")
     ssm_model = build_model(ssm, max_seq=16)
-    with pytest.raises(ValueError, match="ssm"):
-        Engine(ssm_model, None, slots=1, max_len=16)
-    with pytest.raises(ValueError, match="ssm"):
-        # recurrent state advances every row every tick: not isolatable
-        EngineReference(ssm_model, None, slots=1, max_len=16)
-    enc = reduced(get_config("whisper-tiny"))
+    with pytest.raises(UnsupportedFamilyError,
+                       match="KV-decoder-only") as ei:
+        PagedEngine(ssm_model, None, slots=1, max_len=16)
+    assert ei.value.family == "ssm"
+    assert "ssm" not in ei.value.supported
+    assert {"dense", "moe", "vlm"} <= set(ei.value.supported)
+    assert isinstance(ei.value, ValueError)   # old excepts keep working
+    # the slot-bank engines accept recurrent families now ...
+    eng = Engine(ssm_model, None, slots=1, max_len=16,
+                 record_traffic=False)
+    assert eng._guarded
+    ref = EngineReference(ssm_model, None, slots=1, max_len=16)
+    assert ref._guarded
+    # ... but the fused-KV pallas decode kernel stays stacked-KV-only
+    with pytest.raises(ValueError, match="pallas_decode"):
+        Engine(ssm_model, None, slots=1, max_len=16,
+               attn_impl="pallas_decode", record_traffic=False)
+    enc = reduced(get_config("whisper-tiny"), dtype="float32")
     enc_model = build_model(enc, max_seq=16)
-    with pytest.raises(ValueError, match="encdec"):
-        EngineReference(enc_model, None, slots=1, max_len=16)
+    with pytest.raises(UnsupportedFamilyError, match="encdec"):
+        PagedEngine(enc_model, None, slots=1, max_len=16)
 
 
 # --- slot isolation (the seed _prefill broadcast-corruption bug) ------------
